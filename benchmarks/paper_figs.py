@@ -1,0 +1,227 @@
+"""One benchmark per paper figure (Tyagi & Sharma).
+
+Each function returns a list of CSV rows (name, value, derived) and is
+invoked by benchmarks.run. Training benchmarks perform REAL SGD on the
+paper's (scaled-down) workloads; wall-time comes from the calibrated
+heterogeneity simulator (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ControllerConfig
+from repro.het import (
+    WORKLOADS,
+    ClusterSim,
+    hlevel_cluster,
+    homogeneous_cluster,
+    mixed_gpu_cpu_cluster,
+)
+from repro.models.simple import paper_workloads
+from repro.optim import adam, sgd
+from repro.train import HeterogeneousTrainer, TrainConfig
+from repro.train.metrics import batch_trajectory, iteration_time_stats
+
+TARGETS = {"linreg": 0.02, "mnist-cnn": 0.9, "resnet": 1.7}
+OPTS = {"linreg": lambda: sgd(0.05), "mnist-cnn": lambda: adam(2e-3),
+        "resnet": lambda: adam(2e-3)}
+
+
+def _nb(wl, seed=100):
+    counters = {}
+
+    def nb(worker, n):
+        counters[worker] = counters.get(worker, 0) + 1
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + worker),
+                                 counters[worker])
+        return wl.make_batch(key, n)
+
+    return nb
+
+
+def _lag(wl):
+    def lag(params, batch, mask):
+        def lf(p):
+            ls, ws, aux = wl.loss_fn(p, batch, mask)
+            return ls, (ls, ws, aux)  # SUM loss: trainer divides by w_sum
+
+        (_, (ls, ws, aux)), g = jax.value_and_grad(lf, has_aux=True)(params)
+        return (ls, ws, aux), g
+
+    return lag
+
+
+def _train(workload, workers, mode, *, steps=80, target=None, seed=0,
+           controller=None, sync="bsp", b0=32):
+    wl = paper_workloads()[workload]
+    sim = ClusterSim(workers, WORKLOADS[workload], seed=seed)
+    cfg = TrainConfig(
+        b0=b0, microbatch=8, batching=mode, sync=sync, max_steps=steps,
+        target_loss=target, seed=seed,
+        controller=controller or ControllerConfig())
+    tr = HeterogeneousTrainer(
+        init_params=wl.init, loss_and_grad=_lag(wl), next_batch=_nb(wl),
+        optimizer=OPTS[workload](), sim=sim, cfg=cfg)
+    return tr.run()
+
+
+# ---------------------------------------------------------------- figure 1
+
+
+def fig1_heterogeneity_slowdown():
+    """Training-time increase on a heterogeneous vs homogeneous cluster with
+    the SAME total resources, uniform batching (paper Fig. 1)."""
+    rows = []
+    for workload in ("resnet", "mnist-cnn", "linreg"):
+        steps = 40
+        hom = _train(workload, homogeneous_cluster(39), "uniform", steps=steps)
+        het = _train(workload, hlevel_cluster(39, 6), "uniform", steps=steps)
+        slowdown = het["sim_time"] / hom["sim_time"]
+        rows.append((f"fig1/{workload}/slowdown_h6", slowdown,
+                     f"hom={hom['sim_time']:.1f}s het={het['sim_time']:.1f}s"))
+    return rows
+
+
+# ---------------------------------------------------------------- figure 3
+
+
+def fig3_iteration_time_distributions():
+    """Per-worker iteration-time spread: uniform vs variable batching on a
+    (3, 5, 12)-like cores cluster (paper Fig. 3)."""
+    rows = []
+    for mode in ("uniform", "static"):
+        out = _train("resnet", hlevel_cluster(20, 4), mode, steps=30)
+        times = np.asarray(
+            [[WORKLOADS["resnet"].t_sync] for _ in out["history"]])
+        # per-worker times from the simulator model at final batches
+        sim = ClusterSim(hlevel_cluster(20, 4), WORKLOADS["resnet"], seed=1)
+        per_worker = [
+            [sim.iteration_time(k, b) for _ in range(200)]
+            for k, b in enumerate(out["final_batches"])]
+        spread = (np.mean([np.mean(t) for t in per_worker])
+                  and np.std([np.mean(t) for t in per_worker])
+                  / np.mean([np.mean(t) for t in per_worker]))
+        rows.append((f"fig3/{mode}/worker_mean_time_cv", spread,
+                     f"batches={out['final_batches']}"))
+    return rows
+
+
+# ---------------------------------------------------------------- figure 4
+
+
+def fig4_controller_convergence():
+    """(a) convergence in ~2 adjustments from uniform init; (b) oscillation
+    without dead-banding (paper Fig. 4)."""
+    from repro.core import DynamicBatchController
+
+    xput = [1.0, 2.0, 3.0]
+    rows = []
+    # (a) with dead-band
+    ctrl = DynamicBatchController([32, 32, 32])
+    for _ in range(30):
+        ctrl.observe([b / x for b, x in zip(ctrl.batches, xput)])
+    rows.append(("fig4a/adjustments_to_converge", ctrl.num_updates,
+                 f"final={ctrl.batches}"))
+    # (b) without dead-band, noisy times
+    rng = np.random.default_rng(0)
+    ctrl2 = DynamicBatchController(
+        [32, 32, 32], ControllerConfig(dead_band=0.0, ewma_alpha=1.0,
+                                       adaptive_bmax=False))
+    for _ in range(30):
+        ctrl2.observe([max(b / x * (1 + 0.1 * rng.standard_normal()), 1e-3)
+                       for b, x in zip(ctrl2.batches, xput)])
+    rows.append(("fig4b/adjustments_without_deadband", ctrl2.num_updates,
+                 "oscillates (paper Fig. 4b)"))
+    return rows
+
+
+# ---------------------------------------------------------------- figure 5
+
+
+def fig5_throughput_vs_batch():
+    """Throughput rises with batch then falls past the memory limit
+    (paper Fig. 5)."""
+    from repro.het import WorkerSpec
+
+    rows = []
+    for kind, b_mem in (("gpu", 64), ("cpu", 256)):
+        spec = WorkerSpec(cores=8 if kind == "cpu" else 1,
+                          flops_ratio=1.0 if kind == "cpu" else 30.0,
+                          kind=kind, b_mem=b_mem)
+        sim = ClusterSim([spec], WORKLOADS["mnist-cnn"], noise=0.0)
+        batches = (8, 16, 32, 64, 128, 256, 512, 1024, 2048)
+        curve = {b: sim.throughput(0, b) for b in batches}
+        peak_b = max(curve, key=curve.get)
+        rows.append((f"fig5/{kind}/peak_batch", peak_b,
+                     " ".join(f"{b}:{x:.0f}" for b, x in curve.items())))
+        # decline past the cliff: sharp for GPU, gradual for CPU (Fig. 5)
+        assert curve[batches[-1]] < curve[peak_b]
+    return rows
+
+
+# ---------------------------------------------------------------- figure 6
+
+
+def fig6_time_to_accuracy_vs_hlevel(quick: bool = True):
+    """The headline result: training time to target, uniform vs variable,
+    across H-levels (paper Fig. 6: up to 4x)."""
+    rows = []
+    hlevels = (1.0, 2.0, 6.0, 10.0) if quick else (1, 2, 4, 6, 8, 10)
+    workloads = ("resnet", "mnist-cnn", "linreg")
+    steps = {"resnet": 50, "mnist-cnn": 60, "linreg": 150}
+    for workload in workloads:
+        base = None
+        for h in hlevels:
+            workers = (homogeneous_cluster(39) if h == 1.0
+                       else hlevel_cluster(39, h))
+            uni = _train(workload, list(workers), "uniform",
+                         steps=steps[workload])
+            dyn = _train(workload, list(workers), "dynamic",
+                         steps=steps[workload])
+            if h == 1.0:
+                base = uni["sim_time"]
+            speedup = uni["sim_time"] / dyn["sim_time"]
+            rows.append((f"fig6/{workload}/h{h:g}/speedup", speedup,
+                         f"uni={uni['sim_time']:.1f}s dyn={dyn['sim_time']:.1f}s "
+                         f"vs_hom={uni['sim_time']/base:.2f}x"))
+    return rows
+
+
+# ---------------------------------------------------------------- figure 7
+
+
+def fig7_gpu_cpu_mixed():
+    """Mixed GPU+CPU cluster: uniform vs variable (open-loop) vs dynamic
+    (paper Fig. 7a; paper reports >4x for ResNet, ~20% for MNIST)."""
+    rows = []
+    for workload in ("resnet", "mnist-cnn"):
+        steps = 30 if workload == "resnet" else 40
+        res = {}
+        for mode in ("uniform", "static", "dynamic"):
+            out = _train(workload, mixed_gpu_cpu_cluster(), mode,
+                         steps=steps, b0=64)
+            res[mode] = out["sim_time"]
+        rows.append((f"fig7/{workload}/variable_speedup",
+                     res["uniform"] / res["static"],
+                     f"uniform={res['uniform']:.1f}s static={res['static']:.1f}s "
+                     f"dynamic={res['dynamic']:.1f}s"))
+        rows.append((f"fig7/{workload}/dynamic_vs_static",
+                     res["static"] / res["dynamic"], ""))
+    return rows
+
+
+# --------------------------------------------------------- ASP (section IV)
+
+
+def asp_comparison():
+    """BSP vs ASP under heterogeneity with and without variable batching."""
+    rows = []
+    for mode in ("uniform", "dynamic"):
+        out = _train("linreg", hlevel_cluster(39, 6), mode, steps=120,
+                     sync="asp")
+        rows.append((f"asp/{mode}/final_loss", out["final_loss"],
+                     f"time={out['sim_time']:.1f}s"))
+    return rows

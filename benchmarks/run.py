@@ -1,0 +1,71 @@
+"""Benchmark driver: one function per paper table/figure + roofline.
+
+Prints ``name,value,derived`` CSV. Usage:
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig6]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="full fig6 sweep (slower)")
+    args = ap.parse_args()
+
+    from benchmarks import ablations as A
+    from benchmarks import paper_figs as F
+
+    benches = {
+        "fig1": F.fig1_heterogeneity_slowdown,
+        "fig3": F.fig3_iteration_time_distributions,
+        "fig4": F.fig4_controller_convergence,
+        "fig5": F.fig5_throughput_vs_batch,
+        "fig6": lambda: F.fig6_time_to_accuracy_vs_hlevel(quick=not args.full),
+        "fig7": F.fig7_gpu_cpu_mixed,
+        "asp": F.asp_comparison,
+        "ablations": lambda: (A.controller_variants()
+                              + A.openloop_estimation_error()
+                              + A.moe_group_size_sweep()),
+    }
+    print("name,value,derived")
+    for name, fn in benches.items():
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            for row_name, value, derived in fn():
+                print(f"{row_name},{value:.4g},{derived}")
+        except Exception as exc:  # pragma: no cover — keep the run going
+            print(f"{name}/ERROR,nan,{type(exc).__name__}: {exc}")
+        print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+
+    # roofline table from the dry-run artifact, if present
+    if not args.only or args.only == "roofline":
+        path = os.path.join(os.path.dirname(__file__), "..",
+                            "dryrun_results.json")
+        if os.path.exists(path):
+            from repro.launch.roofline import analyze
+
+            with open(path) as f:
+                results = json.load(f)
+            for r in results:
+                if r["status"] != "ok" or r["mesh"] != "16x16":
+                    continue
+                a = analyze(r)
+                print(f"roofline/{a['arch']}/{a['shape']}/{a['dominant']},"
+                      f"{a['bound_s']:.4g},"
+                      f"useful={a['useful_ratio']*100:.0f}%")
+
+
+if __name__ == "__main__":
+    main()

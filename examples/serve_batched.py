@@ -1,0 +1,54 @@
+"""Serving example: batched-request KV-cache decoding on a small LM.
+
+    PYTHONPATH=src python examples/serve_batched.py
+
+Loads a reduced gemma config, prefilloads a batch of prompts, decodes with
+the shared serve engine (same serve_step the decode dry-run shapes lower),
+and verifies greedy decode is deterministic.
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init_lm, reduced
+from repro.serve import ServeConfig, generate
+
+
+def main():
+    cfg = reduced(get_config("gemma-2b"))
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+
+    batch, prompt_len, gen_len = 4, 12, 16
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (batch, prompt_len),
+                                 0, cfg.vocab_size)
+
+    t0 = time.perf_counter()
+    out1 = generate(params, cfg, prompts, gen_len,
+                    ServeConfig(max_seq=prompt_len + gen_len))
+    t1 = time.perf_counter()
+    out2 = generate(params, cfg, prompts, gen_len,
+                    ServeConfig(max_seq=prompt_len + gen_len))
+
+    print(f"prompts       : {prompts.shape}")
+    print(f"generated     : {out1.shape} in {t1-t0:.2f}s "
+          f"(incl. compile)")
+    print(f"deterministic : {bool(jnp.array_equal(out1, out2))}")
+    print(f"sample tokens : {out1[0][:8].tolist()}")
+    assert jnp.array_equal(out1, out2)
+    # temperature sampling path (untrained logits are sharp, so the sampled
+    # sequence may coincide with greedy — determinism is what we assert)
+    out3 = generate(params, cfg, prompts, gen_len,
+                    ServeConfig(max_seq=prompt_len + gen_len,
+                                temperature=5.0))
+    print(f"sampled(T=5) != greedy: {not bool(jnp.array_equal(out1, out3))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro — dynamic batching for heterogeneous distributed training, in JAX.
+
+Reproduction + TPU-native extension of Tyagi & Sharma, "Taming Resource
+Heterogeneity In Distributed ML Training With Dynamic Batching".
+"""
+
+__version__ = "0.1.0"

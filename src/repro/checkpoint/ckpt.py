@@ -1,0 +1,95 @@
+"""Checkpointing: pytree <-> npz with atomic writes + controller/data state.
+
+Flat-key encoding: nested dict/list paths joined by '/'; arrays stored in a
+single .npz, scalars and metadata (incl. the dynamic-batching controller
+state, data cursors, and step counter) in a JSON sidecar inside the archive.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}/"))
+        if len(tree) == 0:
+            out[prefix + "@empty"] = np.asarray(0)
+    elif tree is None:
+        out[prefix + "@none"] = np.asarray(0)
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: dict[str, np.ndarray]) -> Any:
+    if len(flat) == 1 and next(iter(flat)) in ("@none",):
+        return None
+    if len(flat) == 1 and next(iter(flat)) in ("@empty",):
+        return ()
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def rebuild(node):
+        if not isinstance(node, dict):
+            return jnp.asarray(node)
+        if "@none" in node:
+            return None
+        if "@empty" in node:
+            return ()
+        keys = list(node.keys())
+        if all(k.startswith("#") for k in keys):
+            idx = sorted(keys, key=lambda k: int(k[1:]))
+            return tuple(rebuild(node[k]) for k in idx)
+        return {k: rebuild(v) for k, v in node.items()}
+
+    return rebuild(root)
+
+
+def save_checkpoint(path: str, tree: Any, metadata: dict | None = None) -> None:
+    """Atomic save: write to tmp then rename."""
+    tree = jax.device_get(tree)
+    flat = _flatten(tree)
+    buf = io.BytesIO()
+    np.savez(buf, **{k: v for k, v in flat.items()})
+    meta = json.dumps(metadata or {}).encode()
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(len(meta).to_bytes(8, "little"))
+            f.write(meta)
+            f.write(buf.getvalue())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def load_checkpoint(path: str):
+    """Returns (tree, metadata)."""
+    with open(path, "rb") as f:
+        n = int.from_bytes(f.read(8), "little")
+        meta = json.loads(f.read(n).decode())
+        data = np.load(io.BytesIO(f.read()))
+        flat = {k: data[k] for k in data.files}
+    return _unflatten(flat), meta

@@ -1,0 +1,47 @@
+"""Core contribution: dynamic variable mini-batching for heterogeneous DP training."""
+
+from repro.core.allocation import (
+    cores_proportional_allocation,
+    flops_proportional_allocation,
+    gradient_weights,
+    largest_remainder_round,
+    static_allocation,
+)
+from repro.core.batching import (
+    BatchPlan,
+    MicrobatchPlan,
+    example_weight_vector,
+    plan_cluster,
+    plan_microbatches,
+)
+from repro.core.controller import (
+    ControllerConfig,
+    ControllerUpdate,
+    DynamicBatchController,
+    WorkerState,
+)
+from repro.core.grad import (
+    accumulate_microbatch_grads,
+    combine_weighted,
+    weighted_psum,
+)
+
+__all__ = [
+    "BatchPlan",
+    "ControllerConfig",
+    "ControllerUpdate",
+    "DynamicBatchController",
+    "MicrobatchPlan",
+    "WorkerState",
+    "accumulate_microbatch_grads",
+    "combine_weighted",
+    "cores_proportional_allocation",
+    "example_weight_vector",
+    "flops_proportional_allocation",
+    "gradient_weights",
+    "largest_remainder_round",
+    "plan_cluster",
+    "plan_microbatches",
+    "static_allocation",
+    "weighted_psum",
+]

@@ -1,0 +1,81 @@
+"""Weighted gradient combination (paper Eq. 2-3), JAX-native.
+
+    g_k   = lambda_k * grad_k,  lambda_k = b_k / sum_i b_i
+    x_t+1 = x_t - eta * sum_k g_k
+
+Two implementations:
+  * `combine_weighted` — host/driver-side combine over a list of worker
+    gradient pytrees (multislice mode; the all-reduce is jnp arithmetic here,
+    on real hardware it is a cross-slice psum with the same weights).
+  * `weighted_psum` — in-graph combine over a mesh axis (spmd/dry-run mode):
+    each shard contributes its local sum of example-gradients; dividing by
+    the global *weight* sum (not the device count) realizes the weighted
+    average in one all-reduce.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def combine_weighted(grads: Sequence, batches: Sequence[int]):
+    """Weighted average of per-worker gradient pytrees with lambda_k weights."""
+    if len(grads) != len(batches):
+        raise ValueError("one gradient pytree per worker required")
+    total = float(sum(batches))
+    if total <= 0:
+        raise ValueError("global batch must be positive")
+    lams = [b / total for b in batches]
+
+    def _wsum(*leaves):
+        out = lams[0] * leaves[0]
+        for lam, leaf in zip(lams[1:], leaves[1:]):
+            out = out + lam * leaf
+        return out
+
+    return jax.tree_util.tree_map(_wsum, *grads)
+
+
+def weighted_psum(local_grad_sum, local_weight_sum, axis_names):
+    """In-graph weighted mean across mesh axes.
+
+    Args:
+      local_grad_sum: pytree of sum_{examples in shard} w_i * grad_i.
+      local_weight_sum: scalar sum of example weights in this shard.
+      axis_names: mesh axis name or tuple of names to reduce over.
+
+    Returns the globally weighted-average gradient pytree: this is exactly
+    Eq. 3 with lambda weighting when w_i encode the variable-batch masks.
+    """
+    gsum = jax.tree_util.tree_map(
+        lambda g: jax.lax.psum(g, axis_names), local_grad_sum
+    )
+    wsum = jax.lax.psum(local_weight_sum, axis_names)
+    return jax.tree_util.tree_map(lambda g: g / jnp.maximum(wsum, 1e-8), gsum)
+
+
+def accumulate_microbatch_grads(grad_fn, params, microbatches, masks):
+    """Dynamic-trip-count gradient accumulation over (n_steps, m, ...) data.
+
+    `microbatches` is a pytree whose leaves have leading dims (n_steps, m);
+    `masks` is (n_steps, m). Returns (sum of masked per-example grad sums,
+    sum of mask weights, mean masked loss). Uses lax.scan so the compiled
+    program is independent of n_steps only through the data shape — the
+    multislice runtime re-slices the data per plan (cheap host-side reshape).
+    """
+
+    def body(carry, xs):
+        g_acc, w_acc, l_acc = carry
+        batch, mask = xs
+        (loss_sum, w_sum), grads = grad_fn(params, batch, mask)
+        g_acc = jax.tree_util.tree_map(jnp.add, g_acc, grads)
+        return (g_acc, w_acc + w_sum, l_acc + loss_sum), None
+
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    (gsum, wsum, lsum), _ = jax.lax.scan(
+        body, (zeros, jnp.zeros(()), jnp.zeros(())), (microbatches, masks)
+    )
+    return gsum, wsum, lsum

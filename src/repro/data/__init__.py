@@ -1,0 +1,15 @@
+from repro.data.pipeline import (
+    DataPipeline,
+    LMStreamConfig,
+    TokenStream,
+    WorkerDataState,
+    modality_prefix,
+)
+
+__all__ = [
+    "DataPipeline",
+    "LMStreamConfig",
+    "TokenStream",
+    "WorkerDataState",
+    "modality_prefix",
+]

@@ -1,0 +1,23 @@
+from repro.het.simulator import (
+    WORKLOADS,
+    ClusterSim,
+    WorkerSpec,
+    WorkloadModel,
+    amdahl_speedup,
+    hlevel_cluster,
+    homogeneous_cluster,
+    mixed_gpu_cpu_cluster,
+)
+from repro.het import traces
+
+__all__ = [
+    "WORKLOADS",
+    "ClusterSim",
+    "WorkerSpec",
+    "WorkloadModel",
+    "amdahl_speedup",
+    "hlevel_cluster",
+    "homogeneous_cluster",
+    "mixed_gpu_cpu_cluster",
+    "traces",
+]

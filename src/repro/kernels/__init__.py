@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each kernel package has kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jitted wrapper) and ref.py (pure-jnp oracle). On this CPU container
+kernels run with interpret=True; on TPU set interpret=False.
+"""

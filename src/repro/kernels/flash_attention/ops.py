@@ -1,0 +1,57 @@
+"""Jitted, differentiable public wrapper for the flash-attention kernel.
+
+pallas_call has no autodiff rule, so `attention` installs a custom_vjp:
+forward = the Pallas kernel; backward = recompute-based gradients through
+the pure-jnp oracle (mathematically the flash backward IS a recompute —
+a dedicated Pallas backward kernel is the further TPU optimization)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _attention(q, k, v, causal, window, softcap, block_q, block_k, interpret):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap, block_q=block_q, block_k=block_k,
+                           interpret=interpret)
+
+
+def _fwd(q, k, v, causal, window, softcap, block_q, block_k, interpret):
+    out = _attention(q, k, v, causal, window, softcap, block_q, block_k,
+                     interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, softcap, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         window=window, softcap=softcap),
+        q, k, v)
+    return vjp(g)
+
+
+_attention.defvjp(_fwd, _bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_k",
+                     "interpret", "use_kernel"))
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              softcap: Optional[float] = None, block_q: int = 128,
+              block_k: int = 128, interpret: bool = False,
+              use_kernel: bool = True):
+    if not use_kernel:
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+    return _attention(q, k, v, causal, window, softcap, block_q, block_k,
+                      interpret)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None):
+    """q: (B,S,H,D), k/v: (B,T,Hkv,D), H % Hkv == 0. Returns (B,S,H,D)."""
+    b, s, h, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    qg = q.astype(jnp.float32).reshape(b, s, hkv, rep, d)
+    logits = jnp.einsum("bsgrd,btgd->bgrst", qg, k.astype(jnp.float32))
+    logits = logits / math.sqrt(d)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qi = jnp.arange(s)[:, None] + (t - s)  # right-aligned query positions
+    kj = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask = mask & (kj <= qi)
+    if window is not None:
+        mask = mask & (kj > qi - window)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrst,btgd->bsgrd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.rglru_scan.kernel import rglru_linear_scan
+from repro.kernels.rglru_scan.ops import rglru
+from repro.kernels.rglru_scan.ref import rglru_scan
+
+__all__ = ["rglru", "rglru_linear_scan", "rglru_scan"]

@@ -1,0 +1,65 @@
+"""RG-LRU linear recurrence h_t = a_t * h_{t-1} + b_t as a Pallas TPU kernel.
+
+TPU adaptation: the recurrence is elementwise over the width W (VPU work,
+no MXU), so the kernel tiles W into 128-lane blocks, keeps the whole (L, wb)
+time-slab resident in VMEM, and walks time sequentially with the carry in
+VREGs via fori_loop. One HBM read and one HBM write per element — the
+memory-bound optimum — versus the associative-scan jnp path that round-trips
+O(log L) times.
+
+Grid: (batch, W / block_w).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, hT_ref, *, length: int):
+    h = h0_ref[0, :].astype(jnp.float32)                # (wb,)
+
+    def body(t, h):
+        a = a_ref[0, t, :].astype(jnp.float32)
+        bx = b_ref[0, t, :].astype(jnp.float32)
+        h = a * h + bx
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, length, body, h)
+    hT_ref[0, :] = h.astype(hT_ref.dtype)
+
+
+def rglru_linear_scan(a, bx, h0=None, *, block_w: int = 128,
+                      interpret: bool = False):
+    """a, bx: (B, L, W); h0: (B, W) or None. Returns (h (B,L,W), hT (B,W))."""
+    bsz, l, w = a.shape
+    block_w = min(block_w, w)
+    if w % block_w:
+        raise ValueError(f"W={w} must divide block_w={block_w}")
+    if h0 is None:
+        h0 = jnp.zeros((bsz, w), jnp.float32)
+    grid = (bsz, w // block_w)
+
+    kernel = functools.partial(_rglru_kernel, length=l)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, l, block_w), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, l, block_w), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, block_w), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, l, block_w), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, block_w), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, l, w), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, w), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, bx, h0)

@@ -1,0 +1,20 @@
+"""Jitted wrapper for the RG-LRU scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rglru_scan.kernel import rglru_linear_scan
+from repro.kernels.rglru_scan.ref import rglru_scan as rglru_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret",
+                                             "use_kernel"))
+def rglru(a, bx, h0=None, *, block_w: int = 128, interpret: bool = False,
+          use_kernel: bool = True):
+    if not use_kernel:
+        h = rglru_ref(a, bx, initial=h0)
+        return h, h[:, -1]
+    return rglru_linear_scan(a, bx, h0, block_w=block_w, interpret=interpret)

@@ -1,0 +1,5 @@
+"""Oracle for the RG-LRU scan kernel: the associative-scan path."""
+
+from repro.models.recurrent import rglru_scan
+
+__all__ = ["rglru_scan"]

@@ -1,0 +1,5 @@
+from repro.kernels.ssd_scan.kernel import ssd_intra_chunk
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ref import ssd_chunked
+
+__all__ = ["ssd", "ssd_chunked", "ssd_intra_chunk"]

@@ -1,0 +1,78 @@
+"""Mamba-2 SSD intra-chunk computation as a Pallas TPU kernel.
+
+The chunked SSD algorithm splits into (1) an intra-chunk quadratic part —
+the compute hot-spot, two (cl x cl) x (cl x p) MXU contractions per
+(batch, chunk, head) — and (2) a cheap inter-chunk linear recurrence over
+per-chunk states. This kernel implements (1); ops.py stitches (2) in jnp.
+
+TPU adaptation: the chunk length is the MXU tile (default 128); the decay
+matrix L = exp(segsum(a)) is built in VREGs from a VMEM-resident cumsum —
+no (L x L) HBM tensor is ever materialized (the pure-jnp path materializes
+(B, H, nc, cl, cl), which is what makes this a kernel-worthy hot-spot).
+
+Grid: (batch, num_chunks, heads); per instance:
+    y[i]    = sum_{j<=i} (c_i . b_j) * exp(a_cum_i - a_cum_j) * x_j
+    state   = sum_j exp(a_cum_last - a_cum_j) * b_j (x) x_j   -> (P, N)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, st_ref, *, chunk: int):
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)      # (cl, p)
+    a = a_ref[0, 0, :, 0].astype(jnp.float32)         # (cl,)
+    b = b_ref[0, 0, :, 0, :].astype(jnp.float32)      # (cl, n)
+    c = c_ref[0, 0, :, 0, :].astype(jnp.float32)      # (cl, n)
+
+    a_cum = jnp.cumsum(a)                              # (cl,)
+    seg = a_cum[:, None] - a_cum[None, :]              # (cl, cl)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    ltri = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+
+    scores = jnp.dot(c, b.T, preferred_element_type=jnp.float32) * ltri
+    y = jnp.dot(scores, x, preferred_element_type=jnp.float32)
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+
+    decay_end = jnp.exp(a_cum[-1] - a_cum)             # (cl,)
+    bw = b * decay_end[:, None]
+    state = jnp.dot(x.T, bw, preferred_element_type=jnp.float32)  # (p, n)
+    st_ref[0, 0, 0, :, :] = state.astype(st_ref.dtype)
+
+
+def ssd_intra_chunk(x, a_log, b, c, *, interpret: bool = False):
+    """x: (B, nc, cl, H, P); a_log: (B, nc, cl, H); b/c: (B, nc, cl, H, N).
+
+    Returns (y_diag (B, nc, cl, H, P), states (B, nc, H, P, N))."""
+    bsz, nc, cl, h, p = x.shape
+    n = b.shape[-1]
+    grid = (bsz, nc, h)
+
+    kernel = functools.partial(_ssd_kernel, chunk=cl)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, cl, 1, p), lambda i, j, k: (i, j, 0, k, 0)),
+            pl.BlockSpec((1, 1, cl, 1), lambda i, j, k: (i, j, 0, k)),
+            pl.BlockSpec((1, 1, cl, 1, n), lambda i, j, k: (i, j, 0, k, 0)),
+            pl.BlockSpec((1, 1, cl, 1, n), lambda i, j, k: (i, j, 0, k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, cl, 1, p), lambda i, j, k: (i, j, 0, k, 0)),
+            pl.BlockSpec((1, 1, 1, p, n), lambda i, j, k: (i, j, k, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nc, cl, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, nc, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, a_log, b, c)

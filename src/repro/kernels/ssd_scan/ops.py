@@ -1,0 +1,51 @@
+"""Full SSD scan: Pallas intra-chunk kernel + jnp inter-chunk recurrence.
+
+Produces bit-compatible semantics with ref.ssd_chunked (the pure-jnp oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_intra_chunk
+from repro.models.ssm import segsum
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, a_log, b, c, chunk: int, initial_state=None,
+        interpret: bool = False):
+    """Same contract as models.ssm.ssd_chunked, kernel-accelerated.
+
+    x: (B,L,H,P); a_log: (B,L,H); b/c: (B,L,H,N) -> (y (B,L,H,P), state)."""
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    assert l % chunk == 0
+    nc = l // chunk
+
+    xr = x.reshape(bsz, nc, chunk, h, p)
+    ar = a_log.reshape(bsz, nc, chunk, h)
+    br = b.reshape(bsz, nc, chunk, h, n)
+    cr = c.reshape(bsz, nc, chunk, h, n)
+
+    y_diag, states = ssd_intra_chunk(xr, ar, br, cr, interpret=interpret)
+
+    # inter-chunk recurrence (cheap, jnp): identical to the oracle
+    a_cum = jnp.cumsum(ar.transpose(0, 3, 1, 2), axis=-1)     # (B,H,nc,cl)
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+    st = jnp.concatenate([initial_state[:, None],
+                          states.astype(jnp.float32)], axis=1)
+    chunk_decay = a_cum[..., -1]
+    pad = jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(segsum(pad))
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, st)
+    prev_states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    state_decay_out = jnp.exp(a_cum)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", cr.astype(jnp.float32),
+                       prev_states, state_decay_out)
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    return y, final_state

@@ -1,0 +1,5 @@
+"""Oracle for the SSD kernel: the pure-jnp chunked scan from repro.models.ssm."""
+
+from repro.models.ssm import segsum, ssd_chunked
+
+__all__ = ["segsum", "ssd_chunked"]

@@ -1,0 +1,335 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "").replace(
+        "--xla_force_host_platform_device_count=512", "")).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) program.
+
+Proves the distribution config is coherent without hardware: 512 placeholder
+CPU devices host the production meshes; each step function is lowered with
+ShapeDtypeStruct inputs (no allocation), compiled by XLA's SPMD partitioner,
+and its memory/cost/collective profile recorded for §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k --mesh pod [--out results.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_architectures
+from repro.configs.shapes import SHAPES, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch import sharding as SH
+from repro.launch import steps as ST
+from repro.models import shard_hooks
+from repro.models.transformer import block_pattern
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+(" + "|".join(
+        _COLLECTIVES) + r")(?:-start|-done)?\(")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-buffer bytes per collective opcode from HLO text."""
+    out = {}
+    for m in _SHAPE_RE.finditer(hlo_text):
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        size = _DTYPE_BYTES.get(dtype, 4)
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        out[op] = out.get(op, 0) + size
+    # tuple-result collectives (all-reduce over tuples) — approximate via
+    # per-op result lines already captured; leftover untracked ops counted:
+    for op in _COLLECTIVES:
+        count = len(re.findall(rf"\b{op}(?:-start)?\(", hlo_text))
+        out.setdefault(op, 0)
+        out[f"{op}_count"] = count
+    return out
+
+
+def _lower_and_compile(cfg, shape, mesh, fsdp, n_params,
+                       sharding_mode: str = "train"):
+    """Build + jit + lower + compile one step program. Returns (compiled,
+    lower_s, compile_s, optimizer_name)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    bdim = dp if shape.global_batch % (
+        int(jnp.prod(jnp.asarray([mesh.shape[a] for a in dp])))) == 0 else None
+    rules = {
+        "logits": NamedSharding(mesh, P(bdim, None, "model")),
+        "activations": NamedSharding(mesh, P(bdim, None, None)),
+    }
+    if sharding_mode == "decode2d":
+        # activations replicated over 'data' (it now carries weight shards);
+        # decode attention runs under an explicit shard_map (sharded_attn)
+        rules = {
+            "logits": NamedSharding(mesh, P(None, None, ("model", "data"))),
+            "decode_attn": (mesh, dp, "model"),
+        }
+    shard_hooks.set_rules(rules)
+    try:
+        params = ST.init_params_struct(cfg)
+        p_shard = SH.params_shardings(params, mesh, fsdp=fsdp,
+                                      mode=sharding_mode)
+        specs = ST.input_specs(cfg, shape)
+        opt_name = None
+        t0 = time.time()
+        if shape.kind == "train":
+            opt = ST.pick_optimizer(cfg, n_params)
+            opt_name = opt.name
+            opt_state = jax.eval_shape(opt.init, params)
+            o_shard = SH.opt_state_shardings(opt_state, params, p_shard, mesh)
+            b_shard = SH.batch_shardings(specs, mesh)
+            step_fn = ST.make_train_step(cfg, opt)
+            metrics_shard = {k: NamedSharding(mesh, P())
+                             for k in ("loss", "aux", "weight_sum")}
+            jitted = jax.jit(step_fn,
+                             in_shardings=(p_shard, o_shard,
+                                           NamedSharding(mesh, P()), b_shard),
+                             # params/opt feed the next step: outputs keep
+                             # the input shardings (training-loop invariant)
+                             out_shardings=(p_shard, o_shard, metrics_shard),
+                             donate_argnums=(0, 1))
+            args = (params, opt_state, jax.ShapeDtypeStruct((), jnp.int32),
+                    specs)
+        elif shape.kind == "prefill":
+            b_shard = SH.batch_shardings(specs, mesh)
+            jitted = jax.jit(ST.make_prefill_step(cfg),
+                             in_shardings=(p_shard, b_shard))
+            args = (params, specs)
+        else:  # decode
+            cache_shard = SH.cache_shardings(specs["caches"], mesh)
+            b_shard = {k: SH.batch_shardings({k: v}, mesh)[k]
+                       for k, v in specs.items() if k != "caches"}
+            b_shard["caches"] = cache_shard
+            # the cache feeds back into the next step: output sharding must
+            # equal input sharding or GSPMD replicates the returned cache
+            # (a full f32 cache all-gather per step — §Perf iteration D2).
+            logits_out = NamedSharding(mesh, P())
+            jitted = jax.jit(ST.make_serve_step(cfg),
+                             in_shardings=(p_shard, b_shard),
+                             out_shardings=(logits_out, cache_shard),
+                             donate_argnums=(1,))
+            args = (params, specs)
+
+        with mesh:
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        return compiled, t_lower, t_compile, opt_name
+    finally:
+        shard_hooks.set_rules(None)
+
+
+def _extract_cost(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "collectives": collective_bytes(compiled.as_text()),
+    }
+
+
+def cost_probe(cfg, shape, mesh, fsdp, n_params,
+               sharding_mode: str = "train") -> dict:
+    """Extrapolate true per-device HLO flops/bytes/collective-bytes.
+
+    XLA HloCostAnalysis counts while-loop (lax.scan) bodies ONCE, so the
+    scanned production program under-reports depth-dependent cost. We compile
+    two UNROLLED shallow variants (1 and 2 block groups) of the same width
+    and shapes, and extrapolate linearly:
+        cost(L groups) = base + per_group * L,
+        per_group = c2 - c1, base = c1 - per_group.
+    Hybrid tails (< one pattern period) are approximated as a fraction of a
+    group. Remat recompute is visible in the unrolled HLO, so it is counted.
+    """
+    period = len(block_pattern(cfg))
+    n_groups = cfg.num_layers // period
+    tail = cfg.num_layers % period
+    probes = {}
+    for g in (1, 2):
+        pc = cfg.with_(num_layers=g * period, scan_unroll=True)
+        if cfg.family == "encdec":
+            pc = pc.with_(encoder_layers=g)
+        compiled, _, _, _ = _lower_and_compile(pc, shape, mesh, fsdp,
+                                               n_params, sharding_mode)
+        probes[g] = _extract_cost(compiled)
+
+    def extrap(key):
+        c1, c2 = probes[1][key], probes[2][key]
+        per = max(c2 - c1, 0.0)
+        base = max(c1 - per, 0.0)
+        total = base + per * (n_groups + tail / period)
+        return total, per, base
+
+    flops, flops_per, flops_base = extrap("flops")
+    byts, _, _ = extrap("bytes_accessed")
+    coll = {}
+    for op in _COLLECTIVES:
+        c1 = probes[1]["collectives"].get(op, 0)
+        c2 = probes[2]["collectives"].get(op, 0)
+        per = max(c2 - c1, 0)
+        base = max(c1 - per, 0)
+        coll[op] = int(base + per * (n_groups + tail / period))
+    if cfg.family == "encdec":
+        # encoder scan probed at 1/2 layers too; same linear model applies
+        pass
+    return {
+        "flops_total": flops,
+        "flops_per_group": flops_per,
+        "flops_base": flops_base,
+        "bytes_accessed_total": byts,
+        "collective_bytes": coll,
+        "collective_bytes_total": int(sum(coll.values())),
+    }
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            fsdp: bool = True, verbose: bool = True,
+            config_overrides: dict | None = None,
+            probe: bool = True, sharding_mode: str = "train") -> dict:
+    shape = get_shape(shape_name)
+    base = get_config(arch)
+    overrides = dict(param_dtype="bfloat16", dtype="bfloat16", remat=True)
+    overrides.update(config_overrides or {})
+    cfg = base.with_(**overrides)
+    cfg = ST.adapt_for_shape(cfg, shape)
+    ok, why = ST.supported(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "fsdp": fsdp, "sharding_mode": sharding_mode,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        rec["params"] = ST.param_count(cfg)
+
+        compiled, t_lower, t_compile, opt_name = _lower_and_compile(
+            cfg, shape, mesh, fsdp, rec["params"], sharding_mode)
+        if opt_name:
+            rec["optimizer"] = opt_name
+
+        mem = compiled.memory_analysis()
+        scanned_cost = _extract_cost(compiled)
+
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            devices=mesh.size,
+            flops_scanned=scanned_cost["flops"],
+            bytes_scanned=scanned_cost["bytes_accessed"],
+            collectives_scanned=scanned_cost["collectives"],
+        )
+        if mem is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "generated_code_size_in_bytes",
+                         "alias_size_in_bytes", "peak_memory_in_bytes"):
+                v = getattr(mem, attr, None)
+                if v is not None:
+                    rec[attr] = int(v)
+
+        if probe:
+            rec["probe"] = cost_probe(cfg, shape, mesh, fsdp, rec["params"],
+                                      sharding_mode)
+
+        if verbose:
+            p = rec.get("probe", {})
+            print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: OK "
+                  f"compile={rec['compile_s']}s "
+                  f"flops={p.get('flops_total', rec['flops_scanned']):.3e}/dev")
+            print("  compiled.memory_analysis():", mem)  # proves it fits
+            print("  compiled.cost_analysis():",
+                  {k: v for k, v in (compiled.cost_analysis() or {}).items()
+                   if k in ("flops", "bytes accessed")})
+            print(f"  memory_analysis(B/dev): "
+                  f"args={rec.get('argument_size_in_bytes')} "
+                  f"temp={rec.get('temp_size_in_bytes')} "
+                  f"out={rec.get('output_size_in_bytes')}")
+            if p:
+                print(f"  probe: bytes={p['bytes_accessed_total']:.3e} "
+                      f"coll={p['collective_bytes_total']/1e9:.2f}GB "
+                      + ", ".join(f"{k}={v/1e9:.2f}GB"
+                                  for k, v in p["collective_bytes"].items()
+                                  if v))
+    except Exception as exc:  # noqa: BLE001 — record and continue
+        rec.update(status="error", error=f"{type(exc).__name__}: {exc}",
+                   traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: "
+                  f"FAILED {rec['error']}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="beyond-paper profile: decode2d sharding + shard_map "
+                         "decode attention for decode shapes, chunked "
+                         "attention for train/prefill (§Perf)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = list_architectures() if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[
+        args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                overrides, mode = None, "train"
+                if args.optimized:
+                    if SHAPES[shape].kind == "decode":
+                        mode = "decode2d"
+                    else:
+                        overrides = {"attn_chunk": 512}
+                rec = run_one(arch, shape, mp, fsdp=not args.no_fsdp,
+                              config_overrides=overrides, sharding_mode=mode)
+                results.append(rec)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    print(f"\n[dryrun] done: {n_ok} ok, {n_skip} skipped, "
+          f"{len(results) - n_ok - n_skip} failed / {len(results)} total")
+
+
+if __name__ == "__main__":
+    main()

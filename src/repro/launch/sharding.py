@@ -1,0 +1,300 @@
+"""Partition-spec assignment for params, optimizer state, batches and caches.
+
+Strategy (DESIGN.md §7): tensor parallel over `model`, FSDP (ZeRO-3-style
+parameter sharding) over `data` for large models, batch over (`pod`, `data`).
+Rules are name-based (the param trees use stable leaf names); any leaf
+without a matching rule falls back to a divisibility-checked heuristic.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % n == 0
+
+
+def _checked(spec_entries, shape, mesh: Mesh) -> P:
+    """Drop axis assignments that don't divide evenly."""
+    out = []
+    for dim, ax in zip(shape, spec_entries):
+        out.append(ax if _fits(dim, mesh, ax) else None)
+    return P(*out)
+
+
+# --------------------------------------------------------------- parameters
+
+# rules: map from leaf path (joined by '.') suffix -> spec entries for the
+# *unstacked* trailing dims. Leading stacked layer/group dims get None.
+_RULES: list[tuple[tuple[str, ...], tuple]] = [
+    # embeddings / head: V over `model` so logits inherit V/model sharding
+    # (V over `data` would collide with the batch's data-sharding in the
+    # unembed matmul and force V-unsharded logits — §Perf iteration 2)
+    (("embed", "table"), ("model", "data")),
+    (("lm_head", "w"), ("data", "model")),
+    # attention (gqa + whisper variants)
+    (("wq", "w"), ("data", "model")),
+    (("wk", "w"), ("data", "model")),
+    (("wv", "w"), ("data", "model")),
+    (("wo", "w"), ("model", "data")),
+    # mla
+    (("wq_a", "w"), ("data", "model")),
+    (("wq_b", "w"), ("data", "model")),
+    (("wkv_a", "w"), ("data", "model")),
+    (("wkv_b", "w"), ("data", "model")),
+    # dense mlp
+    (("w_gate", "w"), ("data", "model")),
+    (("w_up", "w"), ("data", "model")),
+    (("w_down", "w"), ("model", "data")),
+    # moe experts: (E, D, F) / (E, F, D) — expert-parallel when E divides
+    (("moe", "w_gate"), ("model", "data", None)),
+    (("moe", "w_up"), ("model", "data", None)),
+    (("moe", "w_down"), ("model", None, "data")),
+    (("router", "w"), ("data", None)),
+    # ssd
+    (("in_proj", "w"), ("data", "model")),
+    (("out_proj", "w"), ("model", "data")),
+    (("conv_w",), (None, "model")),
+    # rglru
+    (("in_x", "w"), ("data", "model")),
+    (("in_gate", "w"), ("data", "model")),
+    (("w_a", "w"), ("data", "model")),
+    (("w_x", "w"), ("data", "model")),
+    (("out", "w"), ("model", "data")),
+]
+
+# MoE fallback when num_experts doesn't divide the model axis (e.g. grok's 8
+# experts on a 16-way model axis): tensor-parallel inside each expert.
+_MOE_FALLBACK = {
+    "w_gate": (None, "data", "model"),
+    "w_up": (None, "data", "model"),
+    "w_down": (None, "model", "data"),
+}
+
+
+def _match(path: tuple[str, ...]):
+    for suffix, entries in _RULES:
+        if path[-len(suffix):] == suffix:
+            return entries
+    return None
+
+
+# --- decode2d mode: weights stay fully resident, sharded over BOTH axes ---
+# (FSDP-style 'data' sharding would re-all-gather every weight on every
+# decode step — the dominant §Roofline collective term for the big dense/MoE
+# decode shapes. In decode the per-step activations are tiny, so trading
+# weight gathers for per-layer activation all-reduces wins by ~100x.
+# §Perf iteration D2.)
+_DECODE2D_RULES: list[tuple[tuple[str, ...], tuple]] = [
+    # embeddings: V over both axes (weights fully resident, no per-step
+    # gathers); 2D-layer weights keep the train orientation (contract@data,
+    # out@model) — with activations REPLICATED over 'data' in decode, the
+    # partial-dot + small activation all-reduce replaces the weight gather.
+    (("embed", "table"), (("model", "data"), None)),
+    (("lm_head", "w"), (None, ("model", "data"))),
+    (("wq", "w"), ("data", "model")),
+    (("wk", "w"), ("data", "model")),
+    (("wv", "w"), ("data", "model")),
+    (("wo", "w"), ("model", "data")),
+    (("wq_a", "w"), ("data", "model")),
+    (("wq_b", "w"), ("data", "model")),
+    (("wkv_a", "w"), ("data", "model")),
+    (("wkv_b", "w"), ("data", "model")),
+    (("w_gate", "w"), ("data", "model")),
+    (("w_up", "w"), ("data", "model")),
+    (("w_down", "w"), ("model", "data")),
+    (("moe", "w_gate"), ("model", None, "data")),
+    (("moe", "w_up"), ("model", None, "data")),
+    (("moe", "w_down"), ("model", "data", None)),
+    (("router", "w"), (None, None)),
+    (("in_proj", "w"), ("data", "model")),
+    (("out_proj", "w"), ("model", "data")),
+    (("conv_w",), (None, "model")),
+    (("in_x", "w"), ("data", "model")),
+    (("in_gate", "w"), ("data", "model")),
+    (("w_a", "w"), ("data", "model")),
+    (("w_x", "w"), ("data", "model")),
+    (("out", "w"), ("model", "data")),
+]
+
+_MOE_FALLBACK_2D = {
+    "w_gate": (None, None, ("data", "model")),
+    "w_up": (None, None, ("data", "model")),
+    "w_down": (None, ("data", "model"), None),
+}
+
+
+def _match_mode(path: tuple[str, ...], mode: str):
+    rules = _DECODE2D_RULES if mode == "decode2d" else _RULES
+    for suffix, entries in rules:
+        if path[-len(suffix):] == suffix:
+            return entries
+    return None
+
+
+def param_spec(path: tuple[str, ...], shape: tuple[int, ...], mesh: Mesh,
+               fsdp: bool = True, mode: str = "train") -> P:
+    """PartitionSpec for one parameter leaf."""
+    entries = _match_mode(path, mode)
+    n_lead = 0
+    if entries is not None:
+        n_lead = len(shape) - len(entries)
+        if n_lead < 0:  # rule matched something structurally different
+            entries = None
+    if entries is None:
+        # heuristic: biggest dim -> model, next -> data (if divisible)
+        if len(shape) <= 1 or max(shape) < 1024:
+            return P()
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        ent = [None] * len(shape)
+        ent[order[0]] = "model"
+        if fsdp and len(order) > 1:
+            ent[order[1]] = "data"
+        return _checked(ent, shape, mesh)
+
+    ent = list(entries)
+    # MoE expert-dim fallback when E doesn't divide the model axis
+    if len(ent) == 3 and ent[0] == "model" and not _fits(
+            shape[n_lead], mesh, "model"):
+        name = path[-1]
+        fb = _MOE_FALLBACK_2D if mode == "decode2d" else _MOE_FALLBACK
+        if name in fb:
+            ent = list(fb[name])
+    if not fsdp and mode != "decode2d":
+        ent = [None if e == "data" else e for e in ent]
+    full = [None] * n_lead + ent
+    return _checked(full, shape, mesh)
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    for kp, leaf in flat:
+        path = tuple(
+            k.key if hasattr(k, "key") else str(getattr(k, "idx", k))
+            for k in kp)
+        yield path, leaf
+
+
+def params_shardings(params, mesh: Mesh, fsdp: bool = True,
+                     mode: str = "train"):
+    """NamedSharding pytree matching `params` (works on ShapeDtypeStructs)."""
+
+    def build():
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        specs = []
+        for kp, leaf in flat:
+            path = tuple(
+                k.key if hasattr(k, "key") else str(getattr(k, "idx", k))
+                for k in kp)
+            specs.append(NamedSharding(
+                mesh, param_spec(path, tuple(leaf.shape), mesh, fsdp, mode)))
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    return build()
+
+
+def opt_state_shardings(opt_state, params, params_shard, mesh: Mesh):
+    """Optimizer-state shardings derived from the matching param's spec.
+
+    Handles moment trees (same shapes) and factored states (shape ==
+    param.shape minus one trailing/leading dim) — anything else replicates.
+    """
+    # map shape -> spec from params (first match wins; collisions benign)
+    flat_p = jax.tree_util.tree_leaves(params)
+    flat_s = jax.tree_util.tree_leaves(params_shard)
+    by_shape = {}
+    for p, s in zip(flat_p, flat_s):
+        by_shape.setdefault(tuple(p.shape), s.spec)
+
+    def assign(leaf):
+        shp = tuple(leaf.shape)
+        if shp in by_shape:
+            return NamedSharding(mesh, by_shape[shp])
+        # factored second moments: match a param shape missing one dim
+        for pshape, spec in by_shape.items():
+            if len(shp) == len(pshape) - 1:
+                entries = list(spec) + [None] * (len(pshape) - len(spec))
+                for drop in range(len(pshape)):
+                    if pshape[:drop] + pshape[drop + 1:] == shp:
+                        ent = entries[:drop] + entries[drop + 1:]
+                        return NamedSharding(mesh, _checked(ent, shp, mesh))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(assign, opt_state)
+
+
+# ------------------------------------------------------------ batch / cache
+
+
+def batch_shardings(batch, mesh: Mesh):
+    """Shard the leading (batch) dim over ('pod','data') where divisible."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+    def assign(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        ent = [dp if _fits(leaf.shape[0], mesh, dp) else None]
+        ent += [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*ent))
+
+    return jax.tree_util.tree_map(assign, batch)
+
+
+_CACHE_RULES = {
+    # leaf name -> (batch_dim_index, {dim_index: axis}) over unstacked dims
+    "k": (0, {3: "model"}),        # (B, T, Hkv, Dh): shard head_dim
+    "v": (0, {3: "model"}),
+    "c_kv": (0, {2: "model"}),     # (B, T, R)
+    "k_rope": (0, {3: "model"}),   # (B, T, 1, Dr)
+    "state": (0, {1: "model"}),    # (B, H, P, N): shard ssd heads
+    "conv": (0, {2: "model"}),     # (B, K-1, C)
+    "h": (0, {1: "model"}),        # (B, W)
+    "idx": (0, {}),                # (B,) per-row write positions
+}
+
+
+def cache_shardings(caches, mesh: Mesh, stacked: bool = True):
+    """Shardings for decode caches (leaves may have a leading groups dim)."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+    def build():
+        flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+        out = []
+        for kp, leaf in flat:
+            name = None
+            for k in reversed(kp):
+                if hasattr(k, "key"):
+                    name = k.key
+                    break
+            rule = _CACHE_RULES.get(name)
+            if rule is None or leaf.ndim == 0:
+                out.append(NamedSharding(mesh, P()))
+                continue
+            keys = [k.key for k in kp if hasattr(k, "key")]
+            in_stack = stacked and ("groups" in keys or "dec" in keys
+                                    or "tail" not in keys)
+            lead = 1 if in_stack and leaf.ndim >= 1 else 0
+            bdim, axmap = rule
+            ent = [None] * leaf.ndim
+            b_idx = bdim + lead
+            if b_idx < leaf.ndim and _fits(leaf.shape[b_idx], mesh, dp):
+                ent[b_idx] = dp
+            for d, ax in axmap.items():
+                i = d + lead
+                if i < leaf.ndim and _fits(leaf.shape[i], mesh, ax):
+                    ent[i] = ax
+            out.append(NamedSharding(mesh, P(*ent)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return build()

@@ -1,0 +1,168 @@
+"""Step functions + ShapeDtypeStruct input specs for every (arch x shape).
+
+These are the programs the multi-pod dry-run lowers and compiles:
+  * train_step   — forward + weighted loss (Eq. 2-3 via per-example weights)
+                   + backward + optimizer update, remat per block group;
+  * prefill_step — full-sequence forward, returns last-token logits;
+  * serve_step   — ONE token against a KV/state cache of seq_len.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import InputShape
+from repro.models import transformer as T
+from repro.models import encdec as E
+from repro.models.config import ModelConfig
+from repro.optim.optimizers import Optimizer, adam, momentum
+from repro.serve.engine import cache_length
+
+AUX_WEIGHT = 0.01
+LONG_CONTEXT_WINDOW = 4096
+
+
+import math
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Parameter count via eval_shape (no allocation)."""
+    shapes = init_params_struct(cfg)
+    return sum(int(math.prod(l.shape)) if l.shape else 1
+               for l in jax.tree_util.tree_leaves(shapes))
+
+
+def pick_optimizer(cfg: ModelConfig, n_params: Optional[int] = None) -> Optimizer:
+    """Adam for <50B models; the paper's momentum-SGD for >=50B (fp32 Adam
+    moments on 236B/314B do not fit one v5e pod — DESIGN.md §7)."""
+    n = n_params if n_params is not None else param_count(cfg)
+    return momentum(0.01) if n >= 50e9 else adam(1e-4)
+
+
+def adapt_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Per-shape config adaptation (e.g. sliding window for long_500k)."""
+    if shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm"):
+        return cfg.with_(window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def supported(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    if cfg.family == "encdec" and shape.name == "long_500k":
+        return False, ("whisper decoder max target length << 500k; "
+                       "skip per DESIGN.md §5")
+    return True, ""
+
+
+# ------------------------------------------------------------- input specs
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    act = cfg.act_dtype
+
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), tok),
+            "targets": jax.ShapeDtypeStruct((b, s), tok),
+            "weights": jax.ShapeDtypeStruct((b,), jnp.float32),
+        }
+        if cfg.family == "vlm":
+            specs["prefix"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_patches, cfg.d_model), act)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), act)
+        return specs
+
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), tok)}
+        if cfg.family == "vlm":
+            specs["prefix"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_patches, cfg.d_model), act)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), act)
+        return specs
+
+    # decode
+    clen = cache_length(cfg, s)
+    specs = {
+        "token": jax.ShapeDtypeStruct((b, 1), tok),
+        "position": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        specs["caches"] = jax.eval_shape(
+            lambda: E.init_dec_caches(cfg, b, clen, act))
+        specs["enc_out"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), act)
+    else:
+        specs["caches"] = jax.eval_shape(lambda: T.init_caches(cfg, b, clen, act))
+    return specs
+
+
+# ------------------------------------------------------------------- steps
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer):
+    def train_step(params, opt_state, step, batch):
+        def loss_fn(p):
+            if cfg.family == "encdec":
+                ls, ws, aux = E.encdec_loss(
+                    p, cfg, batch["frames"], batch["tokens"],
+                    batch["targets"], batch["weights"])
+            else:
+                ls, ws, aux = T.lm_loss(
+                    p, cfg, batch["tokens"], batch["targets"],
+                    batch["weights"], prefix_embeds=batch.get("prefix"))
+            mean = ls / jnp.maximum(ws, 1e-9)
+            return mean + AUX_WEIGHT * aux, (ls, ws, aux)
+
+        (loss, (ls, ws, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state = optimizer.update(params, grads, opt_state, step)
+        metrics = {"loss": loss, "aux": aux, "weight_sum": ws}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        if cfg.family == "encdec":
+            enc = E.encode(params, cfg, batch["frames"])
+            logits, _ = E.decode(params, cfg, batch["tokens"], enc)
+        else:
+            logits, _, _ = T.apply_lm(params, cfg, batch["tokens"],
+                                      prefix_embeds=batch.get("prefix"))
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, batch):
+        b = batch["token"].shape[0]
+        pos = jnp.broadcast_to(batch["position"].reshape(1, 1), (b, 1))
+        if cfg.family == "encdec":
+            logits, caches = E.decode(params, cfg, batch["token"],
+                                      batch["enc_out"], caches=batch["caches"],
+                                      positions=pos)
+        else:
+            logits, caches, _ = T.apply_lm(params, cfg, batch["token"],
+                                           caches=batch["caches"],
+                                           positions=pos)
+        return logits[:, 0], caches
+
+    return serve_step
+
+
+def init_params_struct(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    init = E.init_encdec if cfg.family == "encdec" else T.init_lm
+    return jax.eval_shape(lambda k: init(k, cfg), key)

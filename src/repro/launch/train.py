@@ -1,0 +1,132 @@
+"""Training launcher CLI.
+
+Runs heterogeneous data-parallel training of any assigned architecture (or
+paper workload) under a simulated heterogeneous cluster, with the paper's
+batching policies selectable:
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b \
+        --batching dynamic --hlevel 6 --steps 50 --b0 16 --seq-len 64
+
+Real SGD on the reduced config (CPU-feasible); wall-clock from the
+calibrated simulator; prints per-step records and a summary. Use
+--full-config to train the full-size config (requires real accelerators).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config, list_architectures
+from repro.core import ControllerConfig
+from repro.data import DataPipeline
+from repro.het import WORKLOADS, ClusterSim, hlevel_cluster, traces
+from repro.models import (
+    encdec_loss,
+    init_encdec,
+    init_lm,
+    lm_loss,
+    reduced,
+)
+from repro.optim import adam, momentum
+from repro.train import HeterogeneousTrainer, TrainConfig
+
+
+def build_model_fns(cfg, pipe: DataPipeline):
+    init = init_encdec if cfg.family == "encdec" else init_lm
+
+    def loss_and_grad(params, batch, mask):
+        def lf(p):
+            if cfg.family == "encdec":
+                ls, ws, aux = encdec_loss(p, cfg, batch["prefix"],
+                                          batch["tokens"], batch["targets"],
+                                          mask)
+            else:
+                ls, ws, aux = lm_loss(p, cfg, batch["tokens"],
+                                      batch["targets"], mask,
+                                      prefix_embeds=batch.get("prefix"))
+            return ls + 0.01 * aux * jnp.maximum(ws, 1.0), (ls, ws, aux)  # SUM semantics
+
+        (_, (ls, ws, aux)), g = jax.value_and_grad(lf, has_aux=True)(params)
+        return (ls, ws, aux), g
+
+    def init_params(key):
+        return init(key, cfg)
+
+    return init_params, loss_and_grad, pipe.next_batch
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b",
+                    choices=list_architectures())
+    ap.add_argument("--batching", default="dynamic",
+                    choices=["uniform", "static", "dynamic"])
+    ap.add_argument("--sync", default="bsp", choices=["bsp", "asp"])
+    ap.add_argument("--workers", type=int, default=3)
+    ap.add_argument("--total-cores", type=int, default=39)
+    ap.add_argument("--hlevel", type=float, default=6.0)
+    ap.add_argument("--interference", action="store_true",
+                    help="inject a mid-run slowdown on the largest worker")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--b0", type=int, default=16)
+    ap.add_argument("--microbatch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--dead-band", type=float, default=0.05)
+    ap.add_argument("--beyond-paper", action="store_true",
+                    help="zero-cost resize controller variant (DESIGN.md §2)")
+    ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = reduced(cfg)
+    workers = hlevel_cluster(args.total_cores, args.hlevel, args.workers)
+    if args.interference:
+        workers[-1].trace = traces.step_interference(5.0, 1e9, 0.3)
+    sim = ClusterSim(workers, WORKLOADS["transformer"], seed=args.seed)
+
+    pipe = DataPipeline(cfg, seq_len=args.seq_len, num_workers=args.workers,
+                        seed=args.seed)
+    init_params, lag, next_batch = build_model_fns(cfg, pipe)
+
+    tcfg = TrainConfig(
+        b0=args.b0, microbatch=args.microbatch, batching=args.batching,
+        sync=args.sync, max_steps=args.steps, seed=args.seed,
+        controller=ControllerConfig(dead_band=args.dead_band,
+                                    beyond_paper=args.beyond_paper))
+    trainer = HeterogeneousTrainer(
+        init_params=init_params, loss_and_grad=lag, next_batch=next_batch,
+        optimizer=adam(1e-3), sim=sim, cfg=tcfg)
+
+    out = trainer.run()
+    if not args.quiet:
+        for rec in out["history"][:: max(1, args.steps // 10)]:
+            print(f"  step {rec.step:4d} t={rec.sim_time:8.2f}s "
+                  f"loss={rec.loss:7.4f} batches={rec.batches} "
+                  f"{'<- adjusted' if rec.adjusted else ''}")
+        print(json.dumps({k: v for k, v in out.items() if k != "history"},
+                         default=str, indent=1))
+    if args.ckpt:
+        save_checkpoint(args.ckpt, {
+            "params": trainer.params, "opt_state": trainer.opt_state,
+        }, {
+            "arch": args.arch, "step": out["steps"],
+            "controller": (trainer.controller.state_dict()
+                           if trainer.controller else None),
+            "data": pipe.state_dict(),
+        })
+        if not args.quiet:
+            print(f"checkpoint -> {args.ckpt}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

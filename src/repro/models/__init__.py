@@ -1,0 +1,37 @@
+"""Model zoo: config-driven transformer families + the paper's own workloads."""
+
+from repro.models.config import ModelConfig, reduced
+from repro.models.transformer import (
+    apply_lm,
+    block_pattern,
+    init_caches,
+    init_lm,
+    layer_counts,
+    lm_loss,
+)
+from repro.models.encdec import (
+    decode as encdec_decode,
+    encode as encdec_encode,
+    encdec_loss,
+    init_dec_caches,
+    init_encdec,
+)
+from repro.models.simple import Workload, paper_workloads
+
+__all__ = [
+    "ModelConfig",
+    "Workload",
+    "apply_lm",
+    "block_pattern",
+    "encdec_decode",
+    "encdec_encode",
+    "encdec_loss",
+    "init_caches",
+    "init_dec_caches",
+    "init_encdec",
+    "init_lm",
+    "layer_counts",
+    "lm_loss",
+    "paper_workloads",
+    "reduced",
+]

@@ -1,0 +1,133 @@
+"""Encoder-decoder transformer backbone (Whisper-style) [arXiv:2212.04356].
+
+The mel-spectrogram + conv1d frontend is a STUB per the assignment carve-out:
+the encoder consumes precomputed frame embeddings (B, T_enc, D). Positional
+encodings are sinusoidal (Whisper uses sinusoidal for the encoder; we use
+sinusoidal for the decoder too instead of a learned table so that the
+decode_32k shape does not require a 32k-row learned embedding — recorded in
+DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models.shard_hooks import constrain
+
+
+def init_enc_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": L.init_norm(cfg),
+        "attn": L.init_gqa(ks[0], cfg),
+        "norm2": L.init_norm(cfg),
+        "mlp": L.init_mlp(ks[1], cfg),
+    }
+
+
+def init_dec_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": L.init_norm(cfg),
+        "self_attn": L.init_gqa(ks[0], cfg),
+        "norm_x": L.init_norm(cfg),
+        "cross_attn": L.init_gqa(ks[1], cfg),
+        "norm2": L.init_norm(cfg),
+        "mlp": L.init_mlp(ks[2], cfg),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig):
+    cfg.validate()
+    ks = jax.random.split(key, 5)
+    return {
+        "embed": L.init_embedding(ks[0], cfg),
+        "enc": jax.vmap(lambda k: init_enc_block(k, cfg))(
+            jax.random.split(ks[1], cfg.encoder_layers)),
+        "enc_norm": L.init_norm(cfg),
+        "dec": jax.vmap(lambda k: init_dec_block(k, cfg))(
+            jax.random.split(ks[2], cfg.num_layers)),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, T_enc, D) stub-frontend embeddings -> (B, T_enc, D)."""
+    t = frames.shape[1]
+    x = frames.astype(cfg.act_dtype) + L.sinusoidal_positions(
+        t, cfg.d_model).astype(cfg.act_dtype)[None]
+
+    def body(xc, p):
+        h, _ = L.gqa_attention(p["attn"], L.apply_norm(p["norm1"], xc, cfg),
+                               cfg, use_rope=False, causal=False)
+        xc = xc + h
+        xc = xc + L.apply_mlp(p["mlp"], L.apply_norm(p["norm2"], xc, cfg), cfg)
+        xc = constrain(xc, "activations")
+        return xc, None
+
+    x, _ = jax.lax.scan(body, x, params["enc"], unroll=cfg.scan_unroll)
+    return L.apply_norm(params["enc_norm"], x, cfg)
+
+
+def _cross_kv(p_block, cfg, enc_out):
+    b, t, _ = enc_out.shape
+    dh = cfg.head_dim
+    k = L.linear(p_block["cross_attn"]["wk"], enc_out).reshape(b, t, -1, dh)
+    v = L.linear(p_block["cross_attn"]["wv"], enc_out).reshape(b, t, -1, dh)
+    return k, v
+
+
+def decode(params, cfg: ModelConfig, tokens, enc_out, caches=None,
+           positions=None):
+    """tokens: (B, S); enc_out: (B, T_enc, D). Returns (logits, new_caches)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    x = L.embed(params["embed"], tokens, cfg)
+    # sinusoidal decoder positions, computed at `positions` (no table)
+    x = x + L.sinusoidal_at(positions, cfg.d_model).astype(x.dtype)
+
+    def body(carry, xs):
+        xc = carry
+        if caches is None:
+            p = xs
+            cache = None
+        else:
+            p, cache = xs
+        h, nc = L.gqa_attention(
+            p["self_attn"], L.apply_norm(p["norm1"], xc, cfg), cfg,
+            positions=positions, cache=cache, use_rope=False)
+        xc = xc + h
+        kv = _cross_kv(p, cfg, enc_out)
+        h, _ = L.gqa_attention(
+            p["cross_attn"], L.apply_norm(p["norm_x"], xc, cfg), cfg,
+            cross_kv=kv, use_rope=False)
+        xc = xc + h
+        xc = xc + L.apply_mlp(p["mlp"], L.apply_norm(p["norm2"], xc, cfg), cfg)
+        xc = constrain(xc, "activations")
+        return xc, nc
+
+    xs = params["dec"] if caches is None else (params["dec"], caches)
+    x, new_caches = jax.lax.scan(body, x, xs, unroll=cfg.scan_unroll)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], None, x, cfg)
+    return logits, (new_caches if caches is not None else None)
+
+
+def init_dec_caches(cfg: ModelConfig, batch: int, length: int, dtype=None):
+    dtype = dtype or cfg.act_dtype
+    one = L.init_attn_cache(cfg, batch, length, dtype)
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.zeros((cfg.num_layers,) + leaf.shape, leaf.dtype), one)
+
+
+def encdec_loss(params, cfg: ModelConfig, frames, tokens, targets, mask):
+    """Weighted seq2seq cross-entropy; mask (B,) or (B,S)."""
+    enc_out = encode(params, cfg, frames)
+    logits, _ = decode(params, cfg, tokens, enc_out)
+    nll = L.sharded_xent(logits, targets)
+    tok_w = jnp.broadcast_to(mask[:, None] if mask.ndim == 1 else mask, nll.shape)
+    return (nll * tok_w).sum(), tok_w.sum(), jnp.zeros((), jnp.float32)

@@ -1,0 +1,112 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+Training/prefill uses a parallel associative scan over time; decode uses the
+single-step recurrence. A Pallas TPU kernel for the scan lives in
+repro.kernels.rglru_scan; this module is the pure-jnp reference path.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense_init, linear
+from repro.models.ssm import _causal_conv
+
+_RGLRU_C = 8.0
+
+
+def rglru_scan(a, bx, initial=None):
+    """h_t = a_t * h_{t-1} + bx_t via associative scan. a, bx: (B, L, W)."""
+    if initial is not None:
+        # fold the initial state into the first step
+        bx = bx.at[:, 0].add(a[:, 0] * initial)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def init_rglru(key, cfg: ModelConfig):
+    w = cfg.lru_width
+    ks = jax.random.split(key, 3)
+    # Lambda init so that a = sigmoid(lam)^c is in ~[0.9, 0.999]
+    u = jax.random.uniform(ks[0], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u ** (1.0 / _RGLRU_C) / (1 - u ** (1.0 / _RGLRU_C)))
+    return {
+        "lam": lam.astype(jnp.float32),
+        "w_a": {"w": _dense_init(ks[1], (w, w), cfg.p_dtype),
+                "b": jnp.zeros((w,), cfg.p_dtype)},
+        "w_x": {"w": _dense_init(ks[2], (w, w), cfg.p_dtype),
+                "b": jnp.zeros((w,), cfg.p_dtype)},
+    }
+
+
+def apply_rglru(p, x, state=None, use_pallas: bool = False):
+    """x: (B, L, W) -> (B, L, W); state: (B, W) carried hidden or None."""
+    r = jax.nn.sigmoid(linear(p["w_a"], x).astype(jnp.float32))   # recurrence gate
+    i = jax.nn.sigmoid(linear(p["w_x"], x).astype(jnp.float32))   # input gate
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lam"]) * r              # (B,L,W)
+    a = jnp.exp(log_a)
+    gated_x = i * x.astype(jnp.float32)
+    # sqrt(1 - a^2) normalization (Griffin eq. 4); clamp for stability
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bx = mult * gated_x
+    if x.shape[1] == 1 and state is not None:
+        h = a[:, 0] * state + bx[:, 0]
+        return h[:, None].astype(x.dtype), h
+    if use_pallas and x.shape[-1] % 128 == 0:
+        from repro.kernels.rglru_scan.kernel import rglru_linear_scan
+
+        h0 = state if state is not None else None
+        h, h_last = rglru_linear_scan(
+            a, bx, h0, interpret=jax.default_backend() == "cpu")
+        return h.astype(x.dtype), h_last
+    h = rglru_scan(a, bx, initial=state)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def init_recurrent_block(key, cfg: ModelConfig):
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 5)
+    return {
+        "in_x": {"w": _dense_init(ks[0], (d, w), cfg.p_dtype)},
+        "in_gate": {"w": _dense_init(ks[1], (d, w), cfg.p_dtype)},
+        "conv_w": _dense_init(ks[2], (cfg.conv_kernel, w), cfg.p_dtype,
+                              1.0 / math.sqrt(cfg.conv_kernel)),
+        "conv_b": jnp.zeros((w,), cfg.p_dtype),
+        "rglru": init_rglru(ks[3], cfg),
+        "out": {"w": _dense_init(ks[4], (w, d), cfg.p_dtype)},
+    }
+
+
+def recurrent_block(p, x, cfg: ModelConfig, cache=None):
+    """Griffin recurrent block: conv1d + RG-LRU branch, GeLU gate branch.
+
+    cache: {'conv': (B, K-1, W), 'h': (B, W)} or None.
+    """
+    gate = jax.nn.gelu(linear(p["in_gate"], x), approximate=True)
+    xb = linear(p["in_x"], x)
+    conv_state = cache["conv"] if cache is not None else None
+    xb, new_conv = _causal_conv(xb, p["conv_w"].astype(x.dtype), conv_state)
+    xb = xb + p["conv_b"].astype(x.dtype)
+    h_state = cache["h"] if cache is not None else None
+    y, new_h = apply_rglru(p["rglru"], xb, h_state,
+                           use_pallas=cfg.use_pallas)
+    out = linear(p["out"], y * gate)
+    new_cache = None if cache is None else {"conv": new_conv, "h": new_h}
+    return out, new_cache
+
+
+def init_recurrent_cache(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.lru_width), dtype),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }

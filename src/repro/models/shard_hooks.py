@@ -1,0 +1,34 @@
+"""Activation-sharding constraint hooks.
+
+Model code is mesh-agnostic; the launch layer registers NamedShardings for
+well-known activation kinds ('logits', 'embed', ...) and the model calls
+`constrain(x, kind)` at those points. With no registration (CPU tests,
+single-device runs) it is a no-op.
+
+Without the 'logits' constraint, GSPMD materializes the (B, S, V) logits
+unsharded per device — 100s of GB for the 256k-vocab configs (§Perf log).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+_RULES: dict = {}
+
+
+def set_rules(rules: Optional[dict]) -> None:
+    global _RULES
+    _RULES = dict(rules or {})
+
+
+def get_rules() -> dict:
+    return dict(_RULES)
+
+
+def constrain(x, kind: str):
+    sharding = _RULES.get(kind)
+    if sharding is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)

@@ -1,0 +1,217 @@
+"""The paper's own evaluation workloads, reimplemented in JAX.
+
+The paper trains (IV): ResNet on CIFAR-10, an MNIST CNN (Adam), and Linear
+Regression on the bar-crawl dataset. This container has no datasets and one
+CPU core, so we reproduce each at reduced scale on *synthetic data with a
+planted ground truth* — convergence (loss curves, steps-to-target) is real,
+only the data is synthetic. DESIGN.md §9 records the substitution.
+
+Each workload exposes:
+    init(key)                      -> params
+    loss_fn(params, batch, mask)   -> (weighted loss sum, weight sum, aux)
+    make_batch(key, n)             -> batch pytree (leading dim n)
+so the heterogeneous training loop treats them like the transformer LMs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# ------------------------------------------------------------ linear regression
+
+
+@dataclasses.dataclass(frozen=True)
+class LinRegConfig:
+    dim: int = 32
+    noise: float = 0.05
+    name: str = "paper-linreg"
+
+
+def linreg_init(key, cfg: LinRegConfig):
+    return {"w": jnp.zeros((cfg.dim,)), "b": jnp.zeros(())}
+
+
+def linreg_true_params(cfg: LinRegConfig):
+    key = jax.random.PRNGKey(1234)
+    return jax.random.normal(key, (cfg.dim,)), jnp.array(0.5)
+
+
+def linreg_batch(key, n, cfg: LinRegConfig):
+    kx, kn = jax.random.split(key)
+    w, b = linreg_true_params(cfg)
+    x = jax.random.normal(kx, (n, cfg.dim))
+    y = x @ w + b + cfg.noise * jax.random.normal(kn, (n,))
+    return {"x": x, "y": y}
+
+
+def linreg_loss(params, batch, mask, cfg: LinRegConfig):
+    pred = batch["x"] @ params["w"] + params["b"]
+    per_ex = 0.5 * (pred - batch["y"]) ** 2
+    return (per_ex * mask).sum(), mask.sum(), jnp.zeros(())
+
+
+# ------------------------------------------------------------------ MNIST CNN
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    image: int = 16           # synthetic "MNIST" at 16x16
+    classes: int = 10
+    channels: tuple = (8, 16)
+    hidden: int = 64
+    name: str = "paper-mnist-cnn"
+
+
+def _conv_init(key, k, cin, cout):
+    std = 1.0 / math.sqrt(k * k * cin)
+    return jax.random.normal(key, (k, k, cin, cout)) * std
+
+
+def cnn_init(key, cfg: CNNConfig):
+    ks = jax.random.split(key, 4)
+    feat = (cfg.image // 4) ** 2 * cfg.channels[1]
+    return {
+        "c1": _conv_init(ks[0], 3, 1, cfg.channels[0]),
+        "c2": _conv_init(ks[1], 3, cfg.channels[0], cfg.channels[1]),
+        "w1": jax.random.normal(ks[2], (feat, cfg.hidden)) / math.sqrt(feat),
+        "b1": jnp.zeros((cfg.hidden,)),
+        "w2": jax.random.normal(ks[3], (cfg.hidden, cfg.classes))
+              / math.sqrt(cfg.hidden),
+        "b2": jnp.zeros((cfg.classes,)),
+    }
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def cnn_forward(params, images):
+    x = jax.nn.relu(_conv(images, params["c1"], 2))
+    x = jax.nn.relu(_conv(x, params["c2"], 2))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return x @ params["w2"] + params["b2"]
+
+
+def cnn_batch(key, n, cfg: CNNConfig):
+    """Synthetic class-conditional images: class templates + noise."""
+    kc, kt, kn = jax.random.split(key, 3)
+    labels = jax.random.randint(kc, (n,), 0, cfg.classes)
+    templates = jax.random.normal(
+        jax.random.PRNGKey(7), (cfg.classes, cfg.image, cfg.image, 1))
+    imgs = templates[labels] + 0.5 * jax.random.normal(
+        kn, (n, cfg.image, cfg.image, 1))
+    return {"x": imgs, "y": labels}
+
+
+def cnn_loss(params, batch, mask, cfg: CNNConfig):
+    logits = cnn_forward(params, batch["x"])
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+    return (nll * mask).sum(), mask.sum(), jnp.zeros(())
+
+
+def cnn_accuracy(params, batch):
+    logits = cnn_forward(params, batch["x"])
+    return (jnp.argmax(logits, -1) == batch["y"]).mean()
+
+
+# -------------------------------------------------------------- mini ResNet
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    image: int = 16           # synthetic CIFAR at 16x16x3
+    classes: int = 10
+    width: int = 16
+    blocks: int = 3
+    name: str = "paper-resnet"
+
+
+def resnet_init(key, cfg: ResNetConfig):
+    ks = jax.random.split(key, 2 + 2 * cfg.blocks)
+    p = {"stem": _conv_init(ks[0], 3, 3, cfg.width)}
+    for i in range(cfg.blocks):
+        p[f"blk{i}_a"] = _conv_init(ks[1 + 2 * i], 3, cfg.width, cfg.width)
+        p[f"blk{i}_b"] = _conv_init(ks[2 + 2 * i], 3, cfg.width, cfg.width)
+    feat = cfg.width
+    p["head_w"] = jax.random.normal(ks[-1], (feat, cfg.classes)) / math.sqrt(feat)
+    p["head_b"] = jnp.zeros((cfg.classes,))
+    return p
+
+
+def resnet_forward(params, images, cfg: ResNetConfig):
+    x = jax.nn.relu(_conv(images, params["stem"]))
+    for i in range(cfg.blocks):
+        h = jax.nn.relu(_conv(x, params[f"blk{i}_a"]))
+        h = _conv(h, params[f"blk{i}_b"])
+        x = jax.nn.relu(x + h)
+    x = x.mean(axis=(1, 2))  # global average pool
+    return x @ params["head_w"] + params["head_b"]
+
+
+def resnet_batch(key, n, cfg: ResNetConfig):
+    kc, kn = jax.random.split(key)
+    labels = jax.random.randint(kc, (n,), 0, cfg.classes)
+    templates = jax.random.normal(
+        jax.random.PRNGKey(11), (cfg.classes, cfg.image, cfg.image, 3))
+    imgs = templates[labels] + 0.7 * jax.random.normal(
+        kn, (n, cfg.image, cfg.image, 3))
+    return {"x": imgs, "y": labels}
+
+
+def resnet_loss(params, batch, mask, cfg: ResNetConfig):
+    logits = resnet_forward(params, batch["x"], cfg)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+    return (nll * mask).sum(), mask.sum(), jnp.zeros(())
+
+
+def resnet_accuracy(params, batch, cfg: ResNetConfig):
+    logits = resnet_forward(params, batch["x"], cfg)
+    return (jnp.argmax(logits, -1) == batch["y"]).mean()
+
+
+# --------------------------------------------------------------- registry
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    name: str
+    init: callable
+    loss_fn: callable          # (params, batch, mask) -> (loss_sum, w_sum, aux)
+    make_batch: callable       # (key, n) -> batch
+    metric_fn: callable = None  # optional accuracy
+
+
+def paper_workloads() -> dict[str, Workload]:
+    lr_cfg, cnn_cfg, rn_cfg = LinRegConfig(), CNNConfig(), ResNetConfig()
+    return {
+        "linreg": Workload(
+            "linreg",
+            partial(linreg_init, cfg=lr_cfg),
+            partial(linreg_loss, cfg=lr_cfg),
+            partial(linreg_batch, cfg=lr_cfg),
+        ),
+        "mnist-cnn": Workload(
+            "mnist-cnn",
+            partial(cnn_init, cfg=cnn_cfg),
+            partial(cnn_loss, cfg=cnn_cfg),
+            partial(cnn_batch, cfg=cnn_cfg),
+            partial(cnn_accuracy),
+        ),
+        "resnet": Workload(
+            "resnet",
+            partial(resnet_init, cfg=rn_cfg),
+            partial(resnet_loss, cfg=rn_cfg),
+            partial(resnet_batch, cfg=rn_cfg),
+            partial(resnet_accuracy, cfg=rn_cfg),
+        ),
+    }

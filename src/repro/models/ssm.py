@@ -1,0 +1,185 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm (quadratic within a chunk,
+linear across chunks); decode uses the O(1) recurrent state update. The
+chunked intra-chunk computation is also available as a Pallas TPU kernel
+(repro.kernels.ssd_scan) — this module is the pure-jnp reference path.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense_init, apply_norm, init_norm, linear
+
+
+def segsum(a):
+    """Lower-triangular segment sums: out[..., i, j] = sum_{k=j+1..i} a[..., k]."""
+    t = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, a_log, b, c, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    x:     (B, L, H, P)   inputs (already multiplied by dt)
+    a_log: (B, L, H)      per-step log decay (dt * A, A < 0)
+    b, c:  (B, L, H, N)   input/output projections (groups pre-broadcast to H)
+    Returns (y: (B, L, H, P), final_state: (B, H, P, N)).
+    """
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    assert l % chunk == 0, f"seq {l} not divisible by chunk {chunk}"
+    nc = l // chunk
+
+    xr = x.reshape(bsz, nc, chunk, h, p)
+    br = b.reshape(bsz, nc, chunk, h, n)
+    cr = c.reshape(bsz, nc, chunk, h, n)
+    ar = a_log.reshape(bsz, nc, chunk, h).transpose(0, 3, 1, 2)  # (B,H,nc,cl)
+    a_cum = jnp.cumsum(ar, axis=-1)
+
+    # 1. intra-chunk (diagonal block) outputs
+    ltri = jnp.exp(segsum(ar))                                   # (B,H,nc,cl,cl)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", cr, br, ltri, xr)
+
+    # 2. per-chunk final states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)              # (B,H,nc,cl)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", br, decay_states, xr)
+
+    # 3. inter-chunk recurrence
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, h, p, n), x.dtype)
+    states = jnp.concatenate([initial_state[:, None], states], axis=1)  # (B,nc+1,H,P,N)
+    chunk_decay = a_cum[..., -1]                                 # (B,H,nc)
+    pad = jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(segsum(pad))                           # (B,H,nc+1,nc+1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    prev_states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # 4. state -> output for each chunk
+    state_decay_out = jnp.exp(a_cum)                             # (B,H,nc,cl)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", cr, prev_states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    return y, final_state
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv1d. x: (B, L, C), w: (K, C).
+
+    state: (B, K-1, C) trailing context from previous tokens (decode), or None.
+    Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else jnp.zeros_like(x[:, :0])
+    return y, new_state
+
+
+def init_ssd(key, cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.d_inner
+    h, n, g = cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_ngroups
+    conv_dim = di + 2 * g * n
+    ks = jax.random.split(key, 6)
+    # dt bias: softplus^-1 of dt ~ loguniform[1e-3, 1e-1]
+    dt = jnp.exp(
+        jax.random.uniform(ks[3], (h,)) * (math.log(0.1) - math.log(1e-3))
+        + math.log(1e-3)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": {"w": _dense_init(ks[0], (d, 2 * di + 2 * g * n + h), cfg.p_dtype)},
+        "conv_w": (_dense_init(ks[1], (cfg.conv_kernel, conv_dim), cfg.p_dtype,
+                               1.0 / math.sqrt(cfg.conv_kernel))),
+        "conv_b": jnp.zeros((conv_dim,), cfg.p_dtype),
+        "a_log": jnp.log(jax.random.uniform(ks[2], (h,), minval=1.0, maxval=16.0)),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "gate_norm": init_norm(cfg, di),
+        "out_proj": {"w": _dense_init(ks[4], (di, d), cfg.p_dtype)},
+    }
+
+
+def ssd_block(p, x, cfg: ModelConfig, cache=None):
+    """x: (B, S, D) -> (B, S, D). cache: {'conv': (B,K-1,C), 'state': (B,H,P,N)}."""
+    bsz, s, _ = x.shape
+    di, h, n, g = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_ngroups
+    ph = cfg.ssm_head_dim
+
+    zxbcdt = linear(p["in_proj"], x)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * g * n]
+    dt_raw = zxbcdt[..., -h:]
+
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"].astype(x.dtype), conv_state)
+    xbc = jax.nn.silu(xbc + p["conv_b"].astype(x.dtype))
+
+    xs = xbc[..., :di].reshape(bsz, s, h, ph)
+    bmat = xbc[..., di : di + g * n].reshape(bsz, s, g, n)
+    cmat = xbc[..., di + g * n :].reshape(bsz, s, g, n)
+    # broadcast groups to heads
+    rep = h // g
+    bmat = jnp.repeat(bmat, rep, axis=2)
+    cmat = jnp.repeat(cmat, rep, axis=2)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                          # (H,)
+    a_log_step = dt * a                                               # (B,S,H)
+    x_dt = xs.astype(jnp.float32) * dt[..., None]
+
+    if cache is None:
+        pad = (-s) % cfg.ssm_chunk
+        if pad:
+            x_dt = jnp.pad(x_dt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            a_log_step = jnp.pad(a_log_step, ((0, 0), (0, pad), (0, 0)))
+            bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if cfg.use_pallas:
+            from repro.kernels.ssd_scan.ops import ssd as ssd_kernel
+
+            y, final_state = ssd_kernel(
+                x_dt, a_log_step, bmat.astype(jnp.float32),
+                cmat.astype(jnp.float32), chunk=cfg.ssm_chunk,
+                interpret=jax.default_backend() == "cpu")
+        else:
+            y, final_state = ssd_chunked(
+                x_dt, a_log_step, bmat.astype(jnp.float32),
+                cmat.astype(jnp.float32), cfg.ssm_chunk)
+        y = y[:, :s]
+        new_cache = None
+    else:
+        # single-token recurrence (s == 1)
+        state = cache["state"]
+        da = jnp.exp(a_log_step[:, 0])                               # (B,H)
+        dbx = jnp.einsum("bhn,bhp->bhpn", bmat[:, 0].astype(jnp.float32),
+                         x_dt[:, 0])
+        state = state * da[..., None, None] + dbx
+        y = jnp.einsum("bhpn,bhn->bhp", state, cmat[:, 0].astype(jnp.float32))
+        y = y[:, None]
+        new_cache = {"conv": new_conv, "state": state}
+
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = apply_norm(p["gate_norm"], y * jax.nn.silu(z), cfg)
+    out = linear(p["out_proj"], y)
+    return out, new_cache
+
+
+def init_ssd_cache(cfg: ModelConfig, batch: int, dtype):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+        "state": jnp.zeros(
+            (batch, cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    }

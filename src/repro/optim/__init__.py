@@ -1,0 +1,24 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adafactor_mini,
+    adam,
+    adamw,
+    constant_lr,
+    get_optimizer,
+    momentum,
+    sgd,
+)
+from repro.optim.schedules import cosine_schedule, step_schedule
+
+__all__ = [
+    "Optimizer",
+    "adafactor_mini",
+    "adam",
+    "adamw",
+    "constant_lr",
+    "cosine_schedule",
+    "get_optimizer",
+    "momentum",
+    "sgd",
+    "step_schedule",
+]

@@ -1,0 +1,167 @@
+"""Optimizers, built from scratch (no optax in this environment).
+
+The paper uses momentum-SGD for ResNet (lr schedule [0.1, 0.01, 0.001,
+0.0002]) and Adam (lr 1e-4) for the MNIST CNN. We additionally provide AdamW
+and a memory-lean Adafactor variant (row/col second-moment factorization) for
+the ≥100B dry-run configs.
+
+Each optimizer is an (init, update) pair:
+    state = opt.init(params)
+    new_params, new_state = opt.update(params, grads, state, step)
+All state is a pytree -> checkpointable and shardable like params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> lr
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable  # (params, grads, state, step) -> (params, state)
+
+
+def _treemap(f, *ts):
+    return jax.tree_util.tree_map(f, *ts)
+
+
+def constant_lr(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def sgd(lr: Schedule | float) -> Optimizer:
+    sched = lr if callable(lr) else constant_lr(lr)
+
+    def init(params):
+        return ()
+
+    def update(params, grads, state, step):
+        eta = sched(step)
+        return _treemap(lambda p, g: p - eta * g.astype(p.dtype), params, grads), state
+
+    return Optimizer("sgd", init, update)
+
+
+def momentum(lr: Schedule | float, beta: float = 0.9,
+             nesterov: bool = False) -> Optimizer:
+    """The paper's ResNet optimizer."""
+    sched = lr if callable(lr) else constant_lr(lr)
+
+    def init(params):
+        return _treemap(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+    def update(params, grads, state, step):
+        eta = sched(step)
+        new_m = _treemap(lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            upd = _treemap(lambda m, g: beta * m + g.astype(jnp.float32),
+                           new_m, grads)
+        else:
+            upd = new_m
+        new_p = _treemap(lambda p, u: (p.astype(jnp.float32)
+                                       - eta * u).astype(p.dtype), params, upd)
+        return new_p, new_m
+
+    return Optimizer("momentum", init, update)
+
+
+def adam(lr: Schedule | float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_lr(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"m": _treemap(z, params), "v": _treemap(z, params)}
+
+    def update(params, grads, state, step):
+        eta = sched(step)
+        t = step.astype(jnp.float32) + 1.0
+        m = _treemap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                     state["m"], grads)
+        v = _treemap(lambda v, g: b2 * v + (1 - b2)
+                     * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, mi, vi):
+            step_ = eta * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+            if weight_decay:
+                step_ = step_ + eta * weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_).astype(p.dtype)
+
+        return _treemap(upd, params, m, v), {"m": m, "v": v}
+
+    return Optimizer("adam" if not weight_decay else "adamw", init, update)
+
+
+def adamw(lr, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def adafactor_mini(lr: Schedule | float, eps: float = 1e-30,
+                   clip: float = 1.0) -> Optimizer:
+    """Factorized second moments (rows+cols for matrices); no first moment.
+
+    ~0 extra bytes/param for matrices — the dry-run optimizer for 236B/314B
+    MoE configs where even one fp32 moment would not fit HBM."""
+    sched = lr if callable(lr) else constant_lr(lr)
+
+    def init(params):
+        def one(p):
+            if p.ndim >= 2:
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return _treemap(one, params)
+
+    def update(params, grads, state, step):
+        eta = sched(step)
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                r = beta * s["r"] + (1 - beta) * g2.mean(-1)
+                c = beta * s["c"] + (1 - beta) * g2.mean(-2)
+                denom = jnp.sqrt(
+                    r[..., None] * c[..., None, :]
+                    / jnp.maximum(r.mean(-1, keepdims=True)[..., None], eps))
+                new_s = {"r": r, "c": c}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                denom = jnp.sqrt(v)
+                new_s = {"v": v}
+            u = g / jnp.maximum(denom, eps)
+            # update clipping (RMS <= clip)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip)
+            return (p.astype(jnp.float32) - eta * u).astype(p.dtype), new_s
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state)
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_s = tdef.unflatten([o[1] for o in out])
+        return new_p, new_s
+
+    return Optimizer("adafactor-mini", init, update)
+
+
+def get_optimizer(name: str, lr, **kw) -> Optimizer:
+    return {
+        "sgd": sgd,
+        "momentum": momentum,
+        "adam": adam,
+        "adamw": adamw,
+        "adafactor": adafactor_mini,
+    }[name](lr, **kw)

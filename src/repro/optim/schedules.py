@@ -1,0 +1,36 @@
+"""Learning-rate schedules, incl. the paper's step schedule for ResNet."""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+
+def step_schedule(values: Sequence[float], boundaries: Sequence[int]):
+    """Piecewise-constant. The paper's ResNet schedule:
+    values=[0.1, 0.01, 0.001, 0.0002] with accuracy/step boundaries."""
+    vals = jnp.asarray(values, jnp.float32)
+    bounds = jnp.asarray(list(boundaries), jnp.int32)
+    if len(values) != len(boundaries) + 1:
+        raise ValueError("need len(values) == len(boundaries) + 1")
+
+    def sched(step):
+        idx = jnp.sum(step >= bounds)
+        return vals[idx]
+
+    return sched
+
+
+def cosine_schedule(peak: float, total_steps: int, warmup: int = 0,
+                    floor: float = 0.0):
+    def sched(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.asarray(
+            step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1),
+                        0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, peak * warm, cos)
+
+    return sched

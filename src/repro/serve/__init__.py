@@ -1,0 +1,11 @@
+from repro.serve.engine import (
+    ServeConfig,
+    cache_length,
+    generate,
+    prefill,
+    sample,
+    serve_step,
+)
+
+__all__ = ["ServeConfig", "cache_length", "generate", "prefill", "sample",
+           "serve_step"]

@@ -1,0 +1,90 @@
+"""Batched serving engine: prefill + KV-cache decode for all LM families.
+
+Provides the `serve_step` lowered by the decode dry-run shapes
+(decode_32k / long_500k): ONE new token against a cache of seq_len, plus a
+host-level batched-request driver used by the serving example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_seq: int = 2048         # cache length
+    temperature: float = 0.0    # 0 => greedy
+
+
+def cache_length(cfg: ModelConfig, seq_len: int) -> int:
+    """Effective attention-cache length for a decode shape (window-capped)."""
+    if cfg.window is not None:
+        return min(seq_len, cfg.window)
+    return seq_len
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache_len: int,
+            prefix_embeds=None):
+    """Run the prompt through the model, filling the cache token-free.
+
+    For simplicity and shape-stability we build the cache by running the
+    full sequence once (training-style attention), then writing K/V into the
+    cache buffers. Returns (last_logits, caches)."""
+    b, s = tokens.shape
+    caches = T.init_caches(cfg, b, cache_len)
+    # teacher-forced pass writing into caches one step at a time is O(S^2);
+    # production prefill uses the train-style pass + cache injection. Here we
+    # reuse the decode path in a scan for correctness (small examples only).
+    def body(carry, i):
+        cch = carry
+        tok = jax.lax.dynamic_slice(tokens, (0, i), (b, 1))
+        pos = jnp.full((b, 1), i, jnp.int32)
+        logits, cch, _ = T.apply_lm(params, cfg, tok, caches=cch,
+                                    positions=pos)
+        return cch, logits[:, 0]
+
+    caches, all_logits = jax.lax.scan(body, caches, jnp.arange(s))
+    return all_logits[-1], caches
+
+
+def serve_step(params, cfg: ModelConfig, token, caches, position):
+    """One decode step: token (B, 1) -> (logits (B, V), new caches)."""
+    b = token.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(position).reshape(-1, 1), (b, 1))
+    logits, caches, _ = T.apply_lm(params, cfg, token, caches=caches,
+                                   positions=pos)
+    return logits[:, 0], caches
+
+
+def sample(logits, key, temperature: float):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+def generate(params, cfg: ModelConfig, prompts, num_tokens: int,
+             serve_cfg: ServeConfig, key=None):
+    """Greedy/temperature generation for a batch of same-length prompts."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    b, s = prompts.shape
+    clen = cache_length(cfg, serve_cfg.max_seq)
+    _, caches = prefill(params, cfg, prompts, clen)
+    tok = prompts[:, -1:]
+    out = []
+    step_fn = jax.jit(
+        lambda p, t, c, pos: serve_step(p, cfg, t, c, pos),
+        static_argnames=())
+    for i in range(num_tokens):
+        logits, caches = step_fn(params, tok, caches, s + i)
+        key, sub = jax.random.split(key)
+        nxt = sample(logits, sub, serve_cfg.temperature)
+        out.append(nxt)
+        tok = nxt[:, None]
+    return jnp.stack(out, axis=1)

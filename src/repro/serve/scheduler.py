@@ -1,0 +1,169 @@
+"""Continuous-batching request scheduler (dynamic batching for serving).
+
+The paper applies dynamic batching to training; serving has the mirror
+problem: request arrival is bursty and sequence lengths vary, so a *static*
+serving batch either queues requests (latency) or runs underfilled
+(throughput). This scheduler maintains a fixed-shape decode batch of
+`slots` sequences (shape-stable for the compiled serve_step) and fills
+freed slots from the queue every step — per-slot masking plays the role the
+per-example weights play in training.
+
+Pure-host logic over the shared serve engine; used by the serving example
+and tested in test_serve_scheduler.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # (prompt_len,) int32
+    max_new_tokens: int
+    arrived_step: int = 0
+    # filled by the scheduler:
+    started_step: Optional[int] = None
+    tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching over a fixed-shape decode program."""
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
+                 cache_len: int = 256, eos_id: Optional[int] = None):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        self.queue: deque[Request] = deque()
+        self.active: list[Optional[Request]] = [None] * slots
+        self.positions = np.zeros(slots, dtype=np.int32)
+        self.caches = T.init_caches(cfg, slots, cache_len)
+        self.step_count = 0
+        self.finished: list[Request] = []
+
+        def step_fn(params, caches, token, positions, live):
+            pos = positions[:, None]
+            logits, caches, _ = T.apply_lm(params, cfg, token, caches=caches,
+                                           positions=pos)
+            nxt = jnp.argmax(logits[:, 0], axis=-1)
+            nxt = jnp.where(live, nxt, 0)
+            return nxt, caches
+
+        self._step = jax.jit(step_fn)
+        self._next_token = np.zeros(slots, dtype=np.int32)
+
+    # ------------------------------------------------------------ intake
+
+    def submit(self, req: Request) -> None:
+        req.arrived_step = self.step_count
+        self.queue.append(req)
+
+    def _zero_slot_cache(self, slot: int) -> None:
+        """Reset one slot's cache lanes (batch dim = slot)."""
+
+        def zero(leaf):
+            if leaf.ndim >= 2 and leaf.shape[1] == self.slots:
+                return leaf.at[:, slot].set(0)
+            return leaf
+
+        # cache leaves: (groups, B, ...) — batch is dim 1 for arrays, idx is
+        # per-group scalar (shared); positions are tracked per slot instead.
+        self.caches = jax.tree_util.tree_map(zero, self.caches)
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            req.started_step = self.step_count
+            self.active[slot] = req
+            # prefill the slot token-by-token through the decode path
+            # (single compiled program; production would use a prefill
+            # program — same engine, see serve.prefill)
+            self.positions[slot] = 0
+            for tok in req.prompt:
+                self._decode_one(slot_token=(slot, int(tok)))
+            self._next_token[slot] = int(req.prompt[-1])
+
+    # ------------------------------------------------------------- steps
+
+    def _decode_one(self, slot_token=None) -> np.ndarray:
+        """One synchronized decode step for all slots (masked)."""
+        token = np.zeros((self.slots, 1), dtype=np.int32)
+        live = np.zeros((self.slots,), dtype=bool)
+        if slot_token is None:
+            for s, req in enumerate(self.active):
+                if req is not None:
+                    token[s, 0] = self._next_token[s]
+                    live[s] = True
+        else:
+            s, tok = slot_token
+            token[s, 0] = tok
+            live[s] = True
+        nxt, self.caches = self._step(self.params, self.caches,
+                                      jnp.asarray(token),
+                                      jnp.asarray(self.positions),
+                                      jnp.asarray(live))
+        nxt = np.asarray(nxt)
+        self.positions[live] += 1
+        return nxt
+
+    def step(self) -> None:
+        """Admit from the queue, decode one token for every active slot,
+        retire finished requests."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            self.step_count += 1
+            return
+        nxt = self._decode_one()
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt[s])
+            req.tokens.append(tok)
+            if (len(req.tokens) >= req.max_new_tokens
+                    or (self.eos_id is not None and tok == self.eos_id)
+                    or self.positions[s] >= self.cache_len - 1):
+                req.done = True
+                self.finished.append(req)
+                self.active[s] = None
+                self._zero_slot_cache(s)
+                self.positions[s] = 0
+            else:
+                self._next_token[s] = tok
+        self.step_count += 1
+
+    def run_until_idle(self, max_steps: int = 10_000) -> list[Request]:
+        for _ in range(max_steps):
+            if not self.queue and all(r is None for r in self.active):
+                break
+            self.step()
+        return self.finished
+
+    # ----------------------------------------------------------- metrics
+
+    def stats(self) -> dict:
+        lat = [len(r.tokens) and (r.started_step - r.arrived_step)
+               for r in self.finished]
+        occ = np.mean([r is not None for r in self.active]) if self.active \
+            else 0.0
+        return {
+            "finished": len(self.finished),
+            "queued": len(self.queue),
+            "mean_queue_delay_steps": float(np.mean(lat)) if lat else 0.0,
+            "occupancy_now": float(occ),
+        }

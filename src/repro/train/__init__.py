@@ -1,0 +1,6 @@
+from repro.train.loop import HeterogeneousTrainer, StepRecord, TrainConfig
+from repro.train.elastic import ElasticTrainer
+from repro.train import metrics
+
+__all__ = ["ElasticTrainer", "HeterogeneousTrainer", "StepRecord",
+           "TrainConfig", "metrics"]

@@ -1,0 +1,112 @@
+"""Elastic heterogeneous training: workers join and leave mid-run.
+
+The paper's motivating environment is transient-VM fleets (EC2 spot, GCP
+preemptible — §II-A): workers can be preempted at any time and replacements
+of *different sizes* arrive later. This module extends the multislice
+trainer with membership events:
+
+  * `remove_worker(k)` — preemption. The departed worker's batch share is
+    redistributed throughput-proportionally; the global batch is preserved
+    (the paper's Σb_k invariant), so training dynamics are unchanged.
+  * `add_worker(spec)` — a replacement/spare joins. It starts from the
+    current model (weights live on the surviving workers — no restart),
+    gets a throughput-proportional slice of the global batch, and the
+    controller re-equalizes iteration times from there.
+
+Membership changes are zero-cost for the model state (all-reduce data
+parallelism keeps full replicas), and the data pipeline's per-(worker,
+index) determinism means re-assigned streams never skip or repeat examples.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+from repro.core import (
+    ControllerConfig,
+    DynamicBatchController,
+    largest_remainder_round,
+)
+from repro.het.simulator import ClusterSim, WorkerSpec
+from repro.train.loop import HeterogeneousTrainer, TrainConfig
+
+
+class ElasticTrainer(HeterogeneousTrainer):
+    """HeterogeneousTrainer + dynamic worker membership."""
+
+    def __init__(self, *, worker_specs: list[WorkerSpec], workload,
+                 sim_seed: int = 0, **kw):
+        self._specs = list(worker_specs)
+        self._workload = workload
+        self._sim_seed = sim_seed
+        sim = ClusterSim(self._specs, workload, seed=sim_seed)
+        super().__init__(sim=sim, **kw)
+        self.membership_log: list[tuple[int, str, int]] = []
+
+    # ------------------------------------------------------------ events
+
+    def _rebuild_sim(self) -> None:
+        """New simulator over the current membership; clock carries over."""
+        t, it = self.sim.time, self.sim.iteration
+        self.sim = ClusterSim(self._specs, self._workload,
+                              seed=self._sim_seed + len(self.membership_log))
+        self.sim.time, self.sim.iteration = t, it
+        self.k = len(self._specs)
+
+    def _replan(self, batches_hint: Optional[list[int]] = None) -> None:
+        """Redistribute the invariant global batch over current members."""
+        total = self.controller.global_batch if self.controller else sum(
+            self.batches)
+        if batches_hint is None:
+            xput = [self.sim.throughput(i, max(total // self.k, 1))
+                    for i in range(self.k)]
+            s = sum(xput)
+            batches_hint = [total * x / s for x in xput]
+        new_batches = largest_remainder_round(batches_hint, total, lo=1)
+        self.batches = new_batches
+        if self.controller is not None:
+            cfg = self.controller.config
+            self.controller = DynamicBatchController(new_batches, cfg)
+
+    def remove_worker(self, k: int) -> None:
+        """Preemption of worker k (fail-stop; its batch share survives)."""
+        if len(self._specs) <= 1:
+            raise ValueError("cannot remove the last worker")
+        self.membership_log.append((self.step_idx, "remove", k))
+        del self._specs[k]
+        surviving = [b for i, b in enumerate(self.batches) if i != k]
+        self._rebuild_sim()
+        # redistribute the departed share proportionally to current batches
+        self._replan([b * 1.0 for b in surviving])
+
+    def add_worker(self, spec: WorkerSpec) -> None:
+        """A (possibly different-sized) replacement joins; model state is
+        already replicated on survivors — no restart, no checkpoint load."""
+        self.membership_log.append((self.step_idx, "add", len(self._specs)))
+        self._specs.append(spec)
+        self._rebuild_sim()
+        self._replan()
+
+    # ------------------------------------------------------------- runs
+
+    def run_with_events(self, events: dict[int, Callable[["ElasticTrainer"],
+                                                         None]],
+                        max_steps: int) -> dict:
+        """events: {step: fn(trainer)} applied before that step executes."""
+        for step in range(max_steps):
+            if step in events:
+                events[step](self)
+            if self.cfg.sync == "bsp":
+                self.bsp_step()
+            else:
+                self.asp_step()
+        return {
+            "steps": self.step_idx,
+            "sim_time": self.sim.time,
+            "final_loss": self.history[-1].loss if self.history else None,
+            "final_batches": list(self.batches),
+            "membership_log": self.membership_log,
+            "history": self.history,
+        }

@@ -1,0 +1,251 @@
+"""Heterogeneous data-parallel training loop (multislice mode).
+
+K workers (heterogeneous simulated slices) each process a variable mini-batch
+b_k as fixed-shape microbatches (core.batching); gradients are combined with
+lambda_k weights (core.grad); iteration times come from the cluster simulator
+(real SGD, simulated clock — DESIGN.md §2); the dynamic-batching controller
+(core.controller) replans {b_k} online.
+
+Batching policies (paper §III):
+  * 'uniform'  — b_k = b0 for all workers (the baseline the paper beats);
+  * 'static'   — open-loop throughput-proportional allocation (§III-B);
+  * 'dynamic'  — static or uniform init + closed-loop P-controller (§III-C).
+
+Synchronisation: 'bsp' (barrier per iteration) or 'asp' (event-driven,
+per-worker stale updates).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ControllerConfig,
+    DynamicBatchController,
+    combine_weighted,
+    plan_microbatches,
+    static_allocation,
+)
+from repro.het.simulator import ClusterSim
+from repro.optim.optimizers import Optimizer
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    b0: int = 32                     # per-worker nominal batch (global = K*b0)
+    microbatch: int = 8              # fixed compiled shape
+    batching: str = "dynamic"        # 'uniform' | 'static' | 'dynamic'
+    init_allocation: str = "static"  # 'uniform' | 'static' (dynamic's start)
+    sync: str = "bsp"                # 'bsp' | 'asp'
+    controller: ControllerConfig = dataclasses.field(
+        default_factory=ControllerConfig)
+    max_steps: int = 1000
+    target_loss: Optional[float] = None
+    loss_ewma: float = 0.1           # smoothing for the stop criterion
+    seed: int = 0
+    log_every: int = 50
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    sim_time: float
+    iteration_time: float
+    loss: float
+    batches: list
+    adjusted: bool
+    straggler_waste: float
+
+
+class HeterogeneousTrainer:
+    """Drives (loss_and_grad, next_batch, optimizer) under simulated heterogeneity.
+
+    loss_and_grad(params, batch, mask) -> ((loss_sum, w_sum, aux), grads)
+        must be jit-compatible; called with fixed microbatch shapes only.
+        CONTRACT: grads must be the gradient of the *weighted SUM* loss
+        (loss_sum), NOT the mean — the trainer accumulates grad sums across
+        microbatches and divides by the total weight once (exact Eq. 2-3
+        weighting across variable microbatch counts).
+    next_batch(worker, n) -> batch pytree with leading dim n.
+    """
+
+    def __init__(
+        self,
+        *,
+        init_params: Callable,
+        loss_and_grad: Callable,
+        next_batch: Callable,
+        optimizer: Optimizer,
+        sim: ClusterSim,
+        cfg: TrainConfig,
+    ):
+        self.cfg = cfg
+        self.sim = sim
+        self.k = len(sim.workers)
+        self.next_batch = next_batch
+        self.optimizer = optimizer
+        key = jax.random.PRNGKey(cfg.seed)
+        self.params = init_params(key)
+        self.opt_state = optimizer.init(self.params)
+        self.step_idx = 0
+        self._lag = jax.jit(loss_and_grad)
+        self._opt_update = jax.jit(optimizer.update)
+        self.history: list[StepRecord] = []
+        self.recompiles = 0
+        self.batches = self._initial_batches()
+        self.controller = None
+        if cfg.batching == "dynamic":
+            self.controller = DynamicBatchController(self.batches,
+                                                     cfg.controller)
+
+    # ------------------------------------------------------------- planning
+
+    def _initial_batches(self) -> list[int]:
+        cfg = self.cfg
+        if cfg.batching == "uniform" or (
+            cfg.batching == "dynamic" and cfg.init_allocation == "uniform"
+        ):
+            return [cfg.b0] * self.k
+        # open-loop: proportional to modelled worker throughput at b0
+        xput = [self.sim.throughput(i, cfg.b0) for i in range(self.k)]
+        return static_allocation(xput, cfg.b0)
+
+    # ------------------------------------------------------------ gradients
+
+    def _worker_grad(self, worker: int, batch_size: int):
+        """Real gradients for worker's b_k examples via fixed-shape microbatches."""
+        cfg = self.cfg
+        plan = plan_microbatches(batch_size, cfg.microbatch)
+        data = self.next_batch(worker, plan.padded_examples)
+        masks = jnp.asarray(plan.masks())
+        g_sum = None
+        loss_sum = 0.0
+        w_sum = 0.0
+        for i in range(plan.n_steps):
+            mb = jax.tree_util.tree_map(
+                lambda x: x[i * cfg.microbatch:(i + 1) * cfg.microbatch], data)
+            (ls, ws, _aux), grads = self._lag(self.params, mb, masks[i])
+            g_sum = grads if g_sum is None else jax.tree_util.tree_map(
+                jnp.add, g_sum, grads)
+            loss_sum += float(ls)
+            w_sum += float(ws)
+        # mean gradient over the worker's examples
+        g_mean = jax.tree_util.tree_map(lambda g: g / max(w_sum, 1e-9), g_sum)
+        return g_mean, loss_sum, w_sum
+
+    # ------------------------------------------------------------------ BSP
+
+    def bsp_step(self) -> StepRecord:
+        grads, losses, weights = [], 0.0, 0.0
+        for k in range(self.k):
+            g, ls, ws = self._worker_grad(k, self.batches[k])
+            grads.append(g)
+            losses += ls
+            weights += ws
+        # Eq. 2-3: lambda-weighted combine
+        g = combine_weighted(grads, self.batches)
+        self.params, self.opt_state = self._opt_update(
+            self.params, g, self.opt_state, jnp.asarray(self.step_idx))
+        info = self.sim.bsp_step(self.batches)
+        adjusted = False
+        if self.controller is not None:
+            upd = self.controller.observe(info["worker_times"])
+            adjusted = upd.updated
+            self.batches = upd.batches
+        rec = StepRecord(
+            step=self.step_idx,
+            sim_time=self.sim.time,
+            iteration_time=info["iteration_time"],
+            loss=losses / max(weights, 1e-9),
+            batches=list(self.batches),
+            adjusted=adjusted,
+            straggler_waste=info["straggler_waste"],
+        )
+        self.history.append(rec)
+        self.step_idx += 1
+        return rec
+
+    # ------------------------------------------------------------------ ASP
+
+    def asp_step(self) -> StepRecord:
+        """One global ASP update (next worker to finish pushes its gradient).
+
+        True staleness: each worker's gradient is computed on the params it
+        last read; the optimizer applies it whenever the worker finishes.
+        """
+        if not hasattr(self, "_asp_state"):
+            self._asp_state = {
+                "read_params": [self.params] * self.k,
+                "next_done": [self.sim.iteration_time(i, self.batches[i])
+                              for i in range(self.k)],
+                "read_version": [0] * self.k,
+                "version": 0,
+            }
+        st = self._asp_state
+        i = int(np.argmin(st["next_done"]))
+        now = st["next_done"][i]
+        # gradient on stale params
+        saved = self.params
+        self.params = st["read_params"][i]
+        g, ls, ws = self._worker_grad(i, self.batches[i])
+        self.params = saved
+        lam = self.batches[i] / sum(self.batches)
+        g = jax.tree_util.tree_map(lambda x: lam * self.k * x, g)
+        self.params, self.opt_state = self._opt_update(
+            self.params, g, self.opt_state, jnp.asarray(self.step_idx))
+        staleness = st["version"] - st["read_version"][i]
+        st["version"] += 1
+        st["read_version"][i] = st["version"]
+        st["read_params"][i] = self.params
+        st["next_done"][i] = now + self.sim.iteration_time(
+            i, self.batches[i], now)
+        self.sim.time = max(self.sim.time, now)
+        adjusted = False
+        if self.controller is not None and st["version"] % self.k == 0:
+            # observe each worker's latest iteration time
+            times = [self.sim.iteration_time(j, self.batches[j])
+                     for j in range(self.k)]
+            upd = self.controller.observe(times)
+            adjusted = upd.updated
+            self.batches = upd.batches
+        rec = StepRecord(
+            step=self.step_idx, sim_time=self.sim.time,
+            iteration_time=float(now), loss=ls / max(ws, 1e-9),
+            batches=list(self.batches), adjusted=adjusted,
+            straggler_waste=float(staleness),
+        )
+        self.history.append(rec)
+        self.step_idx += 1
+        return rec
+
+    # ------------------------------------------------------------------ run
+
+    def run(self) -> dict:
+        cfg = self.cfg
+        smoothed = None
+        wall0 = _time.perf_counter()
+        for _ in range(cfg.max_steps):
+            rec = self.bsp_step() if cfg.sync == "bsp" else self.asp_step()
+            smoothed = rec.loss if smoothed is None else (
+                cfg.loss_ewma * rec.loss + (1 - cfg.loss_ewma) * smoothed)
+            if cfg.target_loss is not None and smoothed <= cfg.target_loss:
+                break
+        return {
+            "steps": self.step_idx,
+            "sim_time": self.sim.time,
+            "final_loss": smoothed,
+            "reached_target": (cfg.target_loss is not None
+                               and smoothed is not None
+                               and smoothed <= cfg.target_loss),
+            "wall_time": _time.perf_counter() - wall0,
+            "batch_adjustments": (self.controller.num_updates
+                                  if self.controller else 0),
+            "history": self.history,
+            "final_batches": list(self.batches),
+        }

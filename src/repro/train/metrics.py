@@ -1,0 +1,34 @@
+"""Run-summary metrics shared by benchmarks and examples."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def time_to_target(history, target_loss: float, ewma: float = 0.1):
+    """(sim_time, step) at which the smoothed loss first crosses target."""
+    smoothed = None
+    for rec in history:
+        smoothed = rec.loss if smoothed is None else (
+            ewma * rec.loss + (1 - ewma) * smoothed)
+        if smoothed <= target_loss:
+            return rec.sim_time, rec.step
+    return None, None
+
+
+def iteration_time_stats(history, per_worker: bool = False):
+    times = np.asarray([r.iteration_time for r in history])
+    return {
+        "mean": float(times.mean()),
+        "p50": float(np.percentile(times, 50)),
+        "p95": float(np.percentile(times, 95)),
+        "max": float(times.max()),
+    }
+
+
+def straggler_waste(history):
+    return float(np.mean([r.straggler_waste for r in history]))
+
+
+def batch_trajectory(history):
+    return np.asarray([r.batches for r in history])

@@ -1,0 +1,12 @@
+import os
+import sys
+
+# tests must see ONE cpu device (the dry-run sets its own flag in a fresh
+# process); keep jax quiet and deterministic
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: multi-second integration tests")

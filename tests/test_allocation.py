@@ -1,0 +1,66 @@
+"""Static allocation + apportionment tests (paper §III-B)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    cores_proportional_allocation,
+    flops_proportional_allocation,
+    largest_remainder_round,
+    static_allocation,
+)
+
+
+def test_paper_example_proportions():
+    # 3 workers with (3, 5, 12) cores, b0=32 (paper Fig. 3 setup)
+    b = cores_proportional_allocation([3, 5, 12], 32)
+    assert sum(b) == 96
+    assert b[0] < b[1] < b[2]
+    # proportionality within rounding
+    assert abs(b[2] / b[0] - 12 / 3) < 0.75
+
+
+def test_gpu_cpu_flops_split():
+    # paper §IV-B: FLOPs ratio 0.813 : 0.187
+    b = flops_proportional_allocation([0.813, 0.187], 256)
+    assert sum(b) == 512
+    assert abs(b[0] / 512 - 0.813) < 0.01
+
+
+def test_respects_bounds():
+    b = static_allocation([1, 1, 100], 32, b_min=4, b_max=64)
+    assert sum(b) == 96
+    assert all(4 <= x <= 64 for x in b)
+
+
+def test_bad_inputs():
+    with pytest.raises(ValueError):
+        static_allocation([], 32)
+    with pytest.raises(ValueError):
+        static_allocation([1.0, -1.0], 32)
+    with pytest.raises(ValueError):
+        static_allocation([1.0], 0)
+
+
+@given(
+    xput=st.lists(st.floats(0.01, 1000.0), min_size=1, max_size=12),
+    b0=st.integers(1, 4096),
+)
+@settings(max_examples=80, deadline=None)
+def test_allocation_conserves_total(xput, b0):
+    b = static_allocation(xput, b0)
+    assert sum(b) == len(xput) * b0
+    assert all(x >= 1 for x in b)
+
+
+@given(
+    vals=st.lists(st.floats(0.0, 100.0), min_size=1, max_size=10),
+    data=st.data(),
+)
+@settings(max_examples=80, deadline=None)
+def test_largest_remainder_hits_total(vals, data):
+    lo = 1
+    total = data.draw(st.integers(len(vals) * lo, len(vals) * lo + 500))
+    out = largest_remainder_round(vals, total, lo=lo)
+    assert sum(out) == total
+    assert all(v >= lo for v in out)

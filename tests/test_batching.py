@@ -1,0 +1,36 @@
+"""Microbatch decomposition + mask tests (TPU adaptation, DESIGN.md §2)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import example_weight_vector, plan_cluster, plan_microbatches
+
+
+@given(st.integers(1, 10_000), st.integers(1, 256))
+@settings(max_examples=100, deadline=None)
+def test_plan_reconstructs_batch(batch, micro):
+    p = plan_microbatches(batch, micro)
+    assert p.n_full * micro + p.remainder == batch
+    assert 0 <= p.remainder < micro
+    masks = p.masks()
+    assert masks.shape == (p.n_steps, micro)
+    assert int(masks.sum()) == batch  # mask weights == active examples
+
+
+def test_cluster_plan_weights():
+    plan = plan_cluster([10, 20, 34], 8)
+    assert plan.global_batch == 64
+    np.testing.assert_allclose(plan.weights, [10 / 64, 20 / 64, 34 / 64])
+
+
+@given(st.lists(st.integers(1, 64), min_size=1, max_size=6),
+       st.integers(64, 128))
+@settings(max_examples=50, deadline=None)
+def test_example_weight_vector_counts(batches, cap):
+    w = example_weight_vector(batches, cap)
+    assert w.shape == (len(batches) * cap,)
+    assert int(w.sum()) == sum(batches)
+    # worker k's weights are a prefix of its capacity slot
+    for k, b in enumerate(batches):
+        seg = w[k * cap:(k + 1) * cap]
+        assert (seg[:b] == 1.0).all() and (seg[b:] == 0.0).all()

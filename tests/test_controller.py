@@ -1,0 +1,161 @@
+"""Unit + property tests for the dynamic batching controller (paper §III-C)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ControllerConfig,
+    DynamicBatchController,
+    gradient_weights,
+    static_allocation,
+)
+
+
+def times_for(batches, throughputs, t_sync=0.0):
+    return [t_sync + b / x for b, x in zip(batches, throughputs)]
+
+
+class TestController:
+    def test_converges_to_throughput_proportional(self):
+        ctrl = DynamicBatchController([32, 32, 32])
+        xput = [1.0, 2.0, 3.0]
+        for _ in range(10):
+            ctrl.observe(times_for(ctrl.batches, xput))
+        assert ctrl.batches == [16, 32, 48]
+
+    def test_converges_within_two_adjustments_from_uniform(self):
+        # paper Fig. 4a: stable after ~2 adjustments
+        ctrl = DynamicBatchController([30, 30, 30])
+        xput = [1.0, 2.0, 3.0]
+        for _ in range(6):
+            ctrl.observe(times_for(ctrl.batches, xput))
+        assert ctrl.num_updates <= 3
+        ideal = static_allocation(xput, 30)
+        assert all(abs(b - i) <= 2 for b, i in zip(ctrl.batches, ideal))
+
+    def test_dead_band_prevents_oscillation(self):
+        # paper Fig. 4b: with noise, dead-banding stops update churn
+        import random
+
+        rng = random.Random(0)
+        ctrl = DynamicBatchController(
+            [16, 32, 48], ControllerConfig(dead_band=0.05, ewma_alpha=0.3))
+        xput = [1.0, 2.0, 3.0]
+        for _ in range(50):
+            noisy = [t * (1 + 0.03 * rng.gauss(0, 1))
+                     for t in times_for(ctrl.batches, xput)]
+            ctrl.observe(noisy)
+        assert ctrl.num_updates <= 3
+
+    def test_no_dead_band_chases_noise(self):
+        import random
+
+        rng = random.Random(0)
+        ctrl = DynamicBatchController(
+            [16, 32, 48],
+            ControllerConfig(dead_band=0.0, ewma_alpha=1.0,
+                             adaptive_bmax=False))
+        xput = [1.0, 2.0, 3.0]
+        for _ in range(50):
+            noisy = [t * (1 + 0.2 * rng.gauss(0, 1) if t > 0 else t)
+                     for t in times_for(ctrl.batches, xput)]
+            noisy = [max(n, 1e-3) for n in noisy]
+            ctrl.observe(noisy)
+        assert ctrl.num_updates > 10  # oscillates without the dead-band
+
+    def test_adaptive_bmax_clamps_after_throughput_drop(self):
+        cfg = ControllerConfig(dead_band=0.01, ewma_alpha=1.0)
+        ctrl = DynamicBatchController([32, 32], cfg)
+
+        def cliff_xput(k, b):
+            base = [1.0, 3.0][k]
+            if k == 1 and b > 40:  # memory cliff on the fast worker
+                base /= 3.0
+            return base
+
+        for _ in range(20):
+            times = [b / cliff_xput(k, b) for k, b in enumerate(ctrl.batches)]
+            ctrl.observe(times)
+        assert ctrl.workers[1].b_max is not None
+        assert ctrl.batches[1] <= max(ctrl.workers[1].b_max, 41)
+
+    def test_rejects_bad_input(self):
+        ctrl = DynamicBatchController([8, 8])
+        with pytest.raises(ValueError):
+            ctrl.observe([1.0])
+        with pytest.raises(ValueError):
+            ctrl.observe([1.0, -2.0])
+        with pytest.raises(ValueError):
+            DynamicBatchController([])
+        with pytest.raises(ValueError):
+            DynamicBatchController([0, 4])
+
+    def test_state_roundtrip(self):
+        ctrl = DynamicBatchController([16, 32, 48])
+        ctrl.observe([1.0, 1.5, 2.0])
+        clone = DynamicBatchController.from_state_dict(ctrl.state_dict())
+        assert clone.batches == ctrl.batches
+        assert clone.num_updates == ctrl.num_updates
+        # both evolve identically afterwards
+        for _ in range(5):
+            t = times_for(ctrl.batches, [1.0, 2.0, 3.0])
+            ctrl.observe(t)
+            clone.observe(t)
+        assert clone.batches == ctrl.batches
+
+
+# --------------------------------------------------------- property tests
+
+
+@given(
+    batches=st.lists(st.integers(1, 512), min_size=2, max_size=8),
+    xput=st.data(),
+)
+@settings(max_examples=60, deadline=None)
+def test_global_batch_conserved(batches, xput):
+    """Invariant: sum(b_k) == K*b0 forever (paper §III-B)."""
+    k = len(batches)
+    throughputs = [xput.draw(st.floats(0.1, 50.0)) for _ in range(k)]
+    ctrl = DynamicBatchController(batches)
+    total = sum(batches)
+    for _ in range(8):
+        ctrl.observe(times_for(ctrl.batches, throughputs))
+        assert sum(ctrl.batches) == total
+        assert all(b >= 1 for b in ctrl.batches)
+
+
+@given(
+    k=st.integers(2, 6),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=40, deadline=None)
+def test_iteration_time_gap_shrinks(k, seed):
+    """The controller must reduce the max/min iteration-time ratio."""
+    import random
+
+    rng = random.Random(seed)
+    throughputs = [rng.uniform(0.5, 8.0) for _ in range(k)]
+    ctrl = DynamicBatchController(
+        [64] * k, ControllerConfig(dead_band=0.0, b_min=1))
+    t0 = times_for(ctrl.batches, throughputs)
+    gap0 = max(t0) / min(t0)
+    for _ in range(12):
+        ctrl.observe(times_for(ctrl.batches, throughputs))
+    t1 = times_for(ctrl.batches, throughputs)
+    gap1 = max(t1) / min(t1)
+    assert gap1 <= gap0 + 1e-9
+    if gap0 > 1.5:  # meaningful heterogeneity must be mostly removed
+        assert gap1 < gap0
+
+
+@given(st.lists(st.integers(1, 10_000), min_size=1, max_size=16))
+@settings(max_examples=60, deadline=None)
+def test_gradient_weights_sum_to_one(batches):
+    lam = gradient_weights(batches)
+    assert math.isclose(sum(lam), 1.0, rel_tol=1e-9)
+    assert all(l > 0 for l in lam)
+    # proportionality: lam_i / lam_j == b_i / b_j
+    for i in range(len(batches)):
+        assert math.isclose(lam[i], batches[i] / sum(batches), rel_tol=1e-9)

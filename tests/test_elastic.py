@@ -1,0 +1,71 @@
+"""Elastic membership (transient-VM preemption/replacement) tests."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ControllerConfig
+from repro.het import WORKLOADS, WorkerSpec
+from repro.models.simple import paper_workloads
+from repro.optim import sgd
+from repro.train import ElasticTrainer, TrainConfig
+
+
+def _make(specs, steps=40):
+    wl = paper_workloads()["linreg"]
+
+    def lag(params, batch, mask):
+        def lf(p):
+            ls, ws, aux = wl.loss_fn(p, batch, mask)
+            return ls / jnp.maximum(ws, 1e-9), (ls, ws, aux)
+
+        (_, metas), g = jax.value_and_grad(lf, has_aux=True)(params)
+        return metas, g
+
+    counters = {}
+
+    def nb(worker, n):
+        counters[worker] = counters.get(worker, 0) + 1
+        key = jax.random.fold_in(jax.random.PRNGKey(worker), counters[worker])
+        return wl.make_batch(key, n)
+
+    return ElasticTrainer(
+        worker_specs=specs, workload=WORKLOADS["linreg"],
+        init_params=wl.init, loss_and_grad=lag, next_batch=nb,
+        optimizer=sgd(0.05),
+        cfg=TrainConfig(b0=32, microbatch=8, batching="dynamic",
+                        max_steps=steps,
+                        controller=ControllerConfig(dead_band=0.05)))
+
+
+def test_preemption_preserves_global_batch():
+    tr = _make([WorkerSpec(cores=4), WorkerSpec(cores=11),
+                WorkerSpec(cores=24)])
+    out = tr.run_with_events(
+        {10: lambda t: t.remove_worker(2)}, max_steps=25)
+    assert len(out["final_batches"]) == 2
+    # the paper's invariant survives the membership change
+    for rec in out["history"]:
+        assert sum(rec.batches) == 96
+    assert out["membership_log"] == [(10, "remove", 2)]
+    assert jnp.isfinite(out["final_loss"])
+
+
+def test_replacement_joins_and_rebalances():
+    tr = _make([WorkerSpec(cores=8), WorkerSpec(cores=16),
+                WorkerSpec(cores=24)])
+    out = tr.run_with_events(
+        {8: lambda t: t.remove_worker(2),
+         16: lambda t: t.add_worker(WorkerSpec(cores=12))},
+        max_steps=30)
+    assert len(out["final_batches"]) == 3
+    for rec in out["history"]:
+        assert sum(rec.batches) == 96
+    # the smaller replacement gets a smaller share than the departed 24-core
+    assert out["final_batches"][-1] < 48
+
+
+def test_cannot_remove_last_worker():
+    tr = _make([WorkerSpec(cores=8)])
+    with pytest.raises(ValueError):
+        tr.remove_worker(0)

@@ -1,0 +1,87 @@
+"""Sharding rules + real sharded execution on an 8-fake-device mesh."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.launch.sharding import param_spec
+
+HERE = os.path.dirname(__file__)
+
+
+class TestParamSpecRules:
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    def test_attention_rules(self):
+        m = self.FakeMesh()
+        assert tuple(param_spec(("groups", "b0", "attn", "wq", "w"),
+                                (32, 4096, 4096), m)) == (None, "data", "model")
+        assert tuple(param_spec(("groups", "b0", "attn", "wo", "w"),
+                                (32, 4096, 4096), m)) == (None, "model", "data")
+
+    def test_moe_expert_parallel_when_divisible(self):
+        m = self.FakeMesh()
+        spec = param_spec(("groups", "b0", "moe", "w_gate"),
+                          (60, 160, 5120, 1536), m)
+        assert tuple(spec) == (None, "model", "data", None)
+
+    def test_moe_fallback_when_not_divisible(self):
+        m = self.FakeMesh()
+        spec = param_spec(("groups", "b0", "moe", "w_gate"),
+                          (64, 8, 6144, 32768), m)  # grok: 8 experts vs 16-way
+        assert tuple(spec) == (None, None, "data", "model")
+
+    def test_small_leaves_replicated(self):
+        m = self.FakeMesh()
+        # genuinely small leaves (max dim < 1024) stay replicated...
+        assert tuple(param_spec(("groups", "b0", "norm1", "scale"),
+                                (64, 512), m)) in ((), (None, None))
+        # ...but a stacked 256k-vocab-norm-sized leaf may shard (heuristic)
+        spec = tuple(param_spec(("groups", "b0", "norm1", "scale"),
+                                (64, 4096), m))
+        assert spec in ((None, None), (None, "model"), ("data", "model"))
+
+    def test_indivisible_dims_dropped(self):
+        m = self.FakeMesh()
+        spec = param_spec(("embed", "table"), (50280, 2048), m)
+        # 50280 % 16 != 0 -> vocab axis must not be sharded
+        assert tuple(spec)[0] is None
+
+    def test_fsdp_off(self):
+        m = self.FakeMesh()
+        spec = param_spec(("mlp", "w_gate", "w"), (4096, 14336), m, fsdp=False)
+        assert tuple(spec) == (None, "model")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["llama3-8b", "grok-1-314b", "mamba2-1.3b",
+                                  "recurrentgemma-9b", "deepseek-v2-236b"])
+def test_real_sharded_train_step(arch):
+    """Fresh interpreter with 8 fake devices; asserts loss decreases and the
+    variable-batch example weights flow through the weighted loss."""
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "spmd_runner.py"), arch],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ, "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK" in proc.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["llama3-8b", "gemma-2b",
+                                  "deepseek-v2-236b"])
+def test_shard_map_decode_matches_plain(arch):
+    """The §Perf D2v5/D3 shard_map decode attention must be numerically
+    equivalent to the unsharded path (2x2 fake-device mesh)."""
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "spmd_decode_runner.py"), arch],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ, "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK" in proc.stdout

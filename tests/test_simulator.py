@@ -1,0 +1,118 @@
+"""Heterogeneity simulator tests (paper §II/§IV environments)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.het import (
+    WORKLOADS,
+    ClusterSim,
+    WorkerSpec,
+    amdahl_speedup,
+    hlevel_cluster,
+    homogeneous_cluster,
+    mixed_gpu_cpu_cluster,
+    traces,
+)
+
+
+def test_hlevel_paper_configs():
+    # paper: total 39 cores, H=10 -> (2, 17, 20)-style split
+    c = hlevel_cluster(39, 10)
+    cores = [w.cores for w in c]
+    assert sum(cores) == 39
+    assert max(cores) / min(cores) == pytest.approx(10, rel=0.25)
+    # H=2 -> (9, 12, 18)-style
+    c = hlevel_cluster(39, 2)
+    cores = [w.cores for w in c]
+    assert sum(cores) == 39
+    assert max(cores) / min(cores) == pytest.approx(2, rel=0.3)
+
+
+@given(h=st.floats(1.0, 12.0), total=st.integers(24, 128))
+@settings(max_examples=50, deadline=None)
+def test_hlevel_conserves_total(h, total):
+    try:
+        c = hlevel_cluster(total, h)
+    except ValueError:
+        return  # infeasible splits are allowed to raise
+    assert sum(w.cores for w in c) == total
+    assert min(w.cores for w in c) >= 1
+
+
+def test_amdahl_sublinear():
+    s4 = amdahl_speedup(4, 0.95)
+    s16 = amdahl_speedup(16, 0.95)
+    assert s4 < 4 and s16 < 16
+    assert s16 / s4 < 4  # paper §III-C: large workers underperform core count
+
+
+def test_straggler_in_bsp():
+    sim = ClusterSim(hlevel_cluster(39, 6), WORKLOADS["resnet"], noise=0.0)
+    info = sim.bsp_step([32, 32, 32])  # uniform batching on het cluster
+    assert info["straggler_waste"] > 0.2
+    # throughput-proportional batches shrink the waste
+    sim2 = ClusterSim(hlevel_cluster(39, 6), WORKLOADS["resnet"], noise=0.0)
+    xput = [sim2.throughput(i, 32) for i in range(3)]
+    from repro.core import static_allocation
+
+    balanced = static_allocation(xput, 32)
+    info2 = sim2.bsp_step(balanced)
+    assert info2["straggler_waste"] < info["straggler_waste"]
+
+
+def test_memory_cliff():
+    # paper Fig. 5: throughput rises then declines past the memory limit
+    spec = WorkerSpec(cores=8, kind="gpu", b_mem=64)
+    sim = ClusterSim([spec], WORKLOADS["mnist-cnn"], noise=0.0)
+    xs = [sim.throughput(0, b) for b in (8, 32, 64, 256)]
+    assert xs[0] < xs[1] < xs[2]
+    assert xs[3] < xs[2]
+
+
+def test_dynamic_trace_slows_worker():
+    tr = traces.step_interference(10.0, 20.0, 0.25)
+    spec = WorkerSpec(cores=8, trace=tr)
+    sim = ClusterSim([spec], WORKLOADS["resnet"], noise=0.0)
+    t_before = sim.iteration_time(0, 32, at_time=5.0)
+    t_during = sim.iteration_time(0, 32, at_time=15.0)
+    t_after = sim.iteration_time(0, 32, at_time=25.0)
+    # only the compute part is slowed (t_sync is unaffected by availability)
+    assert t_during > 1.5 * t_before
+    assert abs(t_after - t_before) / t_before < 0.2
+
+
+def test_asp_staleness_increases_with_heterogeneity():
+    # slow workers see many global updates between read and write -> the
+    # staleness *tail* grows with heterogeneity (mean is ~K-1 regardless)
+    hom = ClusterSim(homogeneous_cluster(39), WORKLOADS["resnet"], noise=0.0)
+    het = ClusterSim(hlevel_cluster(39, 10), WORKLOADS["resnet"], noise=0.0)
+    s_hom = hom.asp_run([32] * 3, 60)["max_staleness"]
+    s_het = het.asp_run([32] * 3, 60)["max_staleness"]
+    assert s_het > s_hom
+
+
+def test_mixed_gpu_cpu():
+    sim = ClusterSim(mixed_gpu_cpu_cluster(), WORKLOADS["resnet"], noise=0.0)
+    # paper §IV-B: the P100 is "only" ~4.3x the 48-core Xeon per sample
+    ratio = sim.per_sample_time(1, 64, 0.0) / sim.per_sample_time(0, 64, 0.0)
+    assert 3.0 < ratio < 6.0
+
+
+def test_trace_composition():
+    tr = traces.compose(traces.constant(0.5),
+                        traces.step_interference(0, 10, 0.5))
+    assert tr(5.0) == pytest.approx(0.25)
+    assert tr(15.0) == pytest.approx(0.5)
+    ramp = traces.ramp(0.0, 10.0, 0.2)
+    assert ramp(0.0) == pytest.approx(1.0)
+    assert ramp(10.0) == pytest.approx(0.2)
+    sp = traces.random_spikes(0, 1000.0)
+    vals = {sp(t) for t in np.linspace(0, 1000, 5000)}
+    assert vals <= {1.0, 0.3}
+
+
+def test_preemption_trace():
+    tr = traces.preemption(at=50.0)
+    assert tr(49.0) == 1.0
+    assert tr(51.0) < 0.01
