@@ -48,12 +48,18 @@ def _trainer(mode, workers, controller, steps, seed=0, workload="mnist-cnn"):
 
 
 def controller_variants():
-    """Interference hits mid-run; measure recovery time and adjustments."""
+    """Interference hits mid-run; measure recovery time and adjustments.
+
+    Covers the paper's P-law ablations plus the control-layer plugins
+    (PI / full PID / gain-scheduled — DESIGN.md §3)."""
     variants = {
         "paper": ControllerConfig(),
         "no-ewma": ControllerConfig(ewma_alpha=1.0),
         "no-deadband": ControllerConfig(dead_band=0.0),
         "beyond-paper": ControllerConfig(beyond_paper=True),
+        "pi": ControllerConfig(kind="pi"),
+        "pid": ControllerConfig(kind="pid"),
+        "gain-scheduled": ControllerConfig(kind="gain"),
     }
     rows = []
     for name, ctrl_cfg in variants.items():

@@ -29,7 +29,7 @@ from repro.optim import adam
 from repro.train import HeterogeneousTrainer, TrainConfig
 
 
-def build(steps: int, batching: str, seed: int = 0):
+def build(steps: int, batching: str, seed: int = 0, controller: str = "p"):
     # ~100M-param llama-family config (deliverable (b): train ~100M model)
     cfg = get_config("llama3-8b").with_(
         num_layers=8, d_model=512, num_heads=8, num_kv_heads=4, head_dim=64,
@@ -60,7 +60,8 @@ def build(steps: int, batching: str, seed: int = 0):
         sim=sim,
         cfg=TrainConfig(b0=8, microbatch=4, batching=batching,
                         max_steps=steps, seed=seed,
-                        controller=ControllerConfig(dead_band=0.05)),
+                        controller=ControllerConfig(dead_band=0.05,
+                                                    kind=controller)),
     )
     return cfg, pipe, trainer
 
@@ -68,12 +69,17 @@ def build(steps: int, batching: str, seed: int = 0):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--controller", default="p",
+                    choices=["p", "pi", "pid", "gain"],
+                    help="control law for the dynamic mode (the 'gain' and "
+                         "'pid' variants recover from the interference step "
+                         "in fewer readjustments than the paper's P law)")
     ap.add_argument("--ckpt", default="/tmp/het_train.npz")
     args = ap.parse_args()
 
     results = {}
     for mode in ("uniform", "dynamic"):
-        cfg, pipe, trainer = build(args.steps, mode)
+        cfg, pipe, trainer = build(args.steps, mode, controller=args.controller)
         n_params = sum(x.size for x in jax.tree_util.tree_leaves(
             trainer.params))
         out = trainer.run()

@@ -1,8 +1,18 @@
-"""Transient-VM scenario: one worker is preempted mid-run and later replaced
-by a smaller spare; the controller re-balances both times (paper §II-A:
-"omnivorous" training on spot/preemptible fleets).
+"""Transient-VM scenario (paper §II-A, "omnivorous" training on spot fleets):
+
+  phase 1 — provider overcommitment throttles the big worker to 30%;
+            the controller shrinks its batch (availability trace);
+  phase 2 — the worker is PREEMPTED outright: a real membership event
+            removes it, its batch share is reabsorbed by the survivors,
+            and the surviving workers KEEP their controller state
+            (EWMA windows, adaptive b_max, throughput history);
+  phase 3 — a half-size spare joins: another membership event gives it a
+            throughput-proportional slice and the controller re-equalizes.
 
     PYTHONPATH=src python examples/preemption_rebalance.py
+
+Model state never restarts across events (all-reduce data parallelism keeps
+full replicas); the engine remaps its event queue in place.
 """
 
 import os
@@ -11,13 +21,12 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import ControllerConfig
-from repro.het import WORKLOADS, ClusterSim, WorkerSpec, traces
+from repro.het import WORKLOADS, WorkerSpec, traces
 from repro.models.simple import paper_workloads
 from repro.optim import adam
-from repro.train import HeterogeneousTrainer, TrainConfig
+from repro.train import ElasticTrainer, TrainConfig
 
 
 def main():
@@ -38,38 +47,53 @@ def main():
         key = jax.random.fold_in(jax.random.PRNGKey(worker), counters[worker])
         return wl.make_batch(key, n)
 
-    # worker 2: throttled to 30% capacity in [8s, 20s) (provider
-    # overcommitment), then preempted-and-replaced by a half-size spare at
-    # 20s (availability 0.5 thereafter)
+    # worker 2: throttled to 30% capacity from sim-time 2s on (provider
+    # overcommitment); preempted at step 50 and replaced at step 80
     workers = [
         WorkerSpec(cores=8),
         WorkerSpec(cores=16),
-        WorkerSpec(cores=24, trace=traces.compose(
-            traces.step_interference(8.0, 20.0, 0.3),
-            traces.step_interference(20.0, 1e9, 0.5))),
+        WorkerSpec(cores=24, trace=traces.step_interference(2.0, 1e9, 0.3)),
     ]
-    sim = ClusterSim(workers, WORKLOADS["mnist-cnn"], seed=0)
-    trainer = HeterogeneousTrainer(
+    trainer = ElasticTrainer(
+        worker_specs=workers, workload=WORKLOADS["mnist-cnn"], sim_seed=0,
         init_params=wl.init, loss_and_grad=lag, next_batch=nb,
-        optimizer=adam(2e-3), sim=sim,
+        optimizer=adam(2e-3),
         cfg=TrainConfig(b0=32, microbatch=8, batching="dynamic",
                         max_steps=120,
-                        controller=ControllerConfig(dead_band=0.05)))
-    out = trainer.run()
+                        controller=ControllerConfig(dead_band=0.05,
+                                                    kind="gain")))
+
+    events = {
+        50: lambda t: t.remove_worker(2),                     # preemption
+        80: lambda t: t.add_worker(WorkerSpec(cores=12)),     # spare joins
+    }
+    out = trainer.run_with_events(events, max_steps=120)
 
     print("sim-time  batches            (adjustments marked)")
-    last = None
     for rec in out["history"]:
-        if rec.adjusted or last is None or rec.step == len(out["history"]) - 1:
-            print(f"{rec.sim_time:7.1f}s  {rec.batches}"
-                  f"{'   <- adjusted' if rec.adjusted else ''}")
-        last = rec
-    print(f"\nadjustments: {out['batch_adjustments']}, "
-          f"final loss {out['final_loss']:.3f}")
-    traj = [r.batches[2] for r in out["history"]]
-    assert min(traj) < traj[0], "controller never shrank the throttled worker"
-    print("controller shrank the throttled worker's batch "
-          f"{traj[0]} -> {min(traj)} and re-balanced after replacement")
+        if rec.adjusted or rec.step % 20 == 0 or rec.step in (50, 80):
+            marks = []
+            if rec.adjusted:
+                marks.append("<- adjusted")
+            if rec.step in (50, 80):
+                marks.append("<- membership event")
+            print(f"{rec.sim_time:7.1f}s  {rec.batches}   {' '.join(marks)}")
+    print(f"\nmembership log : {out['membership_log']}")
+    print(f"adjustments    : {trainer.controller.num_updates}, "
+          f"retunes: {trainer.controller.num_retunes}")
+    print(f"final batches  : {out['final_batches']} "
+          f"(global {sum(out['final_batches'])} preserved)")
+    print(f"final loss     : {out['final_loss']:.3f}")
+
+    traj2 = [r.batches[2] for r in out["history"] if len(r.batches) == 3
+             and r.step < 50]
+    assert min(traj2) < traj2[0], "controller never shrank the throttled worker"
+    assert len(out["final_batches"]) == 3
+    totals = {sum(r.batches) for r in out["history"]}
+    assert totals == {sum(out["final_batches"])}, "global batch drifted"
+    print("\nOK: throttled worker shrank "
+          f"{traj2[0]} -> {min(traj2)}, share survived preemption, spare "
+          "rebalanced without a restart")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,23 @@
+"""Version compatibility shims for the pinned container toolchain.
+
+`shard_map` graduated from `jax.experimental` to the top-level namespace in
+jax 0.5; the image pins 0.4.x.  Import it from here so both work.
+"""
+
+from __future__ import annotations
+
+try:  # jax >= 0.5
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x: experimental home + old kwarg name
+    from functools import wraps
+
+    from jax.experimental.shard_map import shard_map as _shard_map_04
+
+    @wraps(_shard_map_04)
+    def shard_map(*args, **kwargs):
+        # the replication-check kwarg was renamed check_rep -> check_vma
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map_04(*args, **kwargs)
+
+__all__ = ["shard_map"]

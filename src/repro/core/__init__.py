@@ -14,11 +14,18 @@ from repro.core.batching import (
     plan_cluster,
     plan_microbatches,
 )
-from repro.core.controller import (
+from repro.core.control import (
+    BatchController,
     ControllerConfig,
     ControllerUpdate,
     DynamicBatchController,
+    GainScheduledController,
+    PIController,
+    PIDController,
+    ProportionalController,
     WorkerState,
+    controller_from_state_dict,
+    make_controller,
 )
 from repro.core.grad import (
     accumulate_microbatch_grads,
@@ -27,13 +34,20 @@ from repro.core.grad import (
 )
 
 __all__ = [
+    "BatchController",
     "BatchPlan",
     "ControllerConfig",
     "ControllerUpdate",
     "DynamicBatchController",
+    "GainScheduledController",
     "MicrobatchPlan",
+    "PIController",
+    "PIDController",
+    "ProportionalController",
     "WorkerState",
     "accumulate_microbatch_grads",
+    "controller_from_state_dict",
+    "make_controller",
     "combine_weighted",
     "cores_proportional_allocation",
     "example_weight_vector",

@@ -1,220 +1,31 @@
-"""Proportional-control dynamic mini-batch controller (paper §III-C).
+"""Back-compat shim: the controller moved to the ``repro.core.control``
+package (pluggable P / PI / PID / gain-scheduled laws).  Import from
+``repro.core.control`` (or ``repro.core``) in new code."""
 
-The controller equalizes per-worker iteration times by resizing each worker's
-mini-batch. Control law (Eq. 4-5 of the paper):
+from repro.core.control import (  # noqa: F401
+    BatchController,
+    ControllerConfig,
+    ControllerUpdate,
+    DynamicBatchController,
+    GainScheduledController,
+    PIController,
+    PIDController,
+    ProportionalController,
+    WorkerState,
+    controller_from_state_dict,
+    make_controller,
+)
 
-    tau_k      = t_k - t_bar                  # error: deviation from mean
-    X_k        = b_k / t_k                    # empirical throughput
-    delta(b_k) = -X_k * tau_k
-    b_k       <- b_k + delta(b_k)  ==  b_k * (t_bar / t_k)
-
-Stability mechanisms (paper §III-C.1):
-  * dead-band   — only apply an update when max_k |delta_k| / b_k exceeds a
-                  relative threshold (paper uses 0.05 due to TF kill-restart
-                  cost; our JAX runtime can afford 0.0, see beyond_paper flag);
-  * EWMA        — iteration times are exponentially smoothed over all
-                  iterations since the last readjustment (the "I" term);
-  * bounds      — b_min <= b_k <= b_max per worker, with *adaptive* b_max:
-                  if a worker's throughput drops after a batch increase, its
-                  b_max is clamped to the last-good batch size (Fig. 5).
-
-The controller is pure-python host-side logic (it reacts to measured wall
-times, which only exist on the host); it is deliberately free of jax deps so
-it can drive either the multislice runtime or the simulator.
-"""
-
-from __future__ import annotations
-
-import dataclasses
-import math
-from typing import Optional, Sequence
-
-from repro.core.allocation import largest_remainder_round
-
-
-@dataclasses.dataclass
-class ControllerConfig:
-    """Knobs for the dynamic batching controller."""
-
-    dead_band: float = 0.05          # paper's 5% relative dead-band
-    ewma_alpha: float = 0.3          # smoothing factor for iteration times
-    b_min: int = 1                   # lower bound on any worker's batch
-    b_max: Optional[int] = None      # static upper bound (None = unbounded)
-    adaptive_bmax: bool = True       # clamp b_max on observed throughput drop
-    throughput_drop_tol: float = 0.02  # relative drop that triggers clamping
-    conserve_global: bool = True     # renormalize so sum(b_k) stays constant
-    min_iters_between_updates: int = 1
-    # Beyond-paper mode: zero dead-band + per-iteration fractional updates.
-    # (Safe in this runtime because a batch resize is a host-side scalar
-    # change, not a kill-restart. Kept OFF for the paper-faithful baseline.)
-    beyond_paper: bool = False
-
-    def __post_init__(self) -> None:
-        if not (0.0 <= self.ewma_alpha <= 1.0):
-            raise ValueError(f"ewma_alpha must be in [0,1], got {self.ewma_alpha}")
-        if self.dead_band < 0:
-            raise ValueError("dead_band must be >= 0")
-        if self.b_min < 1:
-            raise ValueError("b_min must be >= 1")
-        if self.beyond_paper:
-            self.dead_band = 0.0
-            self.min_iters_between_updates = 1
-
-
-@dataclasses.dataclass
-class WorkerState:
-    """Per-worker controller bookkeeping."""
-
-    batch: int
-    ewma_time: Optional[float] = None   # smoothed iteration time since last update
-    b_max: Optional[int] = None         # per-worker adaptive upper bound
-    last_throughput: Optional[float] = None  # samples/sec at last readjustment
-    last_batch: Optional[int] = None    # batch at the previous readjustment
-
-
-@dataclasses.dataclass
-class ControllerUpdate:
-    """Result of one observe() call."""
-
-    batches: list[int]            # current per-worker batch plan
-    updated: bool                 # did a readjustment happen this iteration
-    errors: list[float]           # tau_k used (0.0 when not updated)
-    reason: str                   # 'dead-band', 'updated', 'warmup', ...
-
-
-class DynamicBatchController:
-    """Paper §III-C proportional controller with EWMA/dead-band/bounds."""
-
-    def __init__(
-        self,
-        initial_batches: Sequence[int],
-        config: ControllerConfig | None = None,
-    ) -> None:
-        if len(initial_batches) == 0:
-            raise ValueError("need at least one worker")
-        if any(b < 1 for b in initial_batches):
-            raise ValueError(f"initial batches must be >= 1: {initial_batches}")
-        self.config = config or ControllerConfig()
-        self.workers = [WorkerState(batch=int(b)) for b in initial_batches]
-        self.global_batch = int(sum(initial_batches))
-        self._iters_since_update = 0
-        self.num_updates = 0
-        self.history: list[list[int]] = [list(initial_batches)]
-
-    # ------------------------------------------------------------------ api
-
-    @property
-    def batches(self) -> list[int]:
-        return [w.batch for w in self.workers]
-
-    def observe(self, iteration_times: Sequence[float]) -> ControllerUpdate:
-        """Feed one iteration's per-worker times; maybe readjust batches.
-
-        Implements the paper's 4-step "putting it all together" recipe:
-          1. EWMA-smooth iteration times since the last batch update.
-          2. Proportional rule Eq. 4-5 on the smoothed times.
-          3. Enforce [b_min, b_max] bounds.
-          4. Dead-band check on the *relative* max change.
-        """
-        if len(iteration_times) != len(self.workers):
-            raise ValueError(
-                f"got {len(iteration_times)} times for {len(self.workers)} workers"
-            )
-        if any(t <= 0 or not math.isfinite(t) for t in iteration_times):
-            raise ValueError(f"iteration times must be positive finite: {iteration_times}")
-
-        cfg = self.config
-        # -- step 1: EWMA over the window since the last readjustment
-        for w, t in zip(self.workers, iteration_times):
-            if w.ewma_time is None:
-                w.ewma_time = float(t)
-            else:
-                w.ewma_time = cfg.ewma_alpha * float(t) + (1 - cfg.ewma_alpha) * w.ewma_time
-
-        self._iters_since_update += 1
-        if self._iters_since_update < cfg.min_iters_between_updates:
-            return ControllerUpdate(self.batches, False, [0.0] * len(self.workers), "warmup")
-
-        # -- step 2: proportional rule on smoothed times
-        mu = [w.ewma_time for w in self.workers]
-        t_bar = sum(mu) / len(mu)
-        errors = [m - t_bar for m in mu]
-        raw = []
-        for w, m in zip(self.workers, mu):
-            # b' = b + delta = b - (b/mu)*(mu - t_bar) = b * t_bar / mu
-            raw.append(w.batch * t_bar / m)
-
-        # conserve the global batch (paper: sum b_k = K*b0 invariant)
-        if cfg.conserve_global:
-            scale = self.global_batch / sum(raw)
-            raw = [r * scale for r in raw]
-
-        # -- step 3: bounds
-        bounded = []
-        for w, r in zip(self.workers, raw):
-            hi = min(x for x in (cfg.b_max, w.b_max, self.global_batch) if x is not None)
-            bounded.append(min(max(r, float(cfg.b_min)), float(hi)))
-        # -- step 4: dead-band on the *pre-rounding* relative change (integer
-        # quantization must not trip the band for small batches)
-        max_rel = max(
-            abs(r - w.batch) / max(w.batch, 1)
-            for r, w in zip(bounded, self.workers)
-        )
-        if max_rel <= cfg.dead_band:
-            return ControllerUpdate(self.batches, False, errors, "dead-band")
-
-        # integer plan that conserves the global batch exactly
-        new_batches = largest_remainder_round(
-            bounded, self.global_batch if cfg.conserve_global else None,
-            lo=cfg.b_min,
-            hi=[min(x for x in (cfg.b_max, w.b_max, self.global_batch) if x is not None)
-                for w in self.workers],
-        )
-        if all(nb == w.batch for nb, w in zip(new_batches, self.workers)):
-            return ControllerUpdate(self.batches, False, errors, "dead-band")
-
-        # -- adaptive b_max: detect throughput drops caused by the last grow
-        if cfg.adaptive_bmax:
-            for w, m in zip(self.workers, mu):
-                tput = w.batch / m
-                if (
-                    w.last_throughput is not None
-                    and w.last_batch is not None
-                    and w.batch > w.last_batch
-                    and tput < w.last_throughput * (1 - cfg.throughput_drop_tol)
-                ):
-                    # growing past last_batch hurt: clamp to the last good size
-                    w.b_max = w.last_batch
-                w.last_throughput = tput
-                w.last_batch = w.batch
-
-        for w, nb in zip(self.workers, new_batches):
-            w.batch = int(nb)
-            w.ewma_time = None  # restart the EWMA window (paper: window = since last update)
-        self._iters_since_update = 0
-        self.num_updates += 1
-        self.history.append(self.batches)
-        return ControllerUpdate(self.batches, True, errors, "updated")
-
-    # -------------------------------------------------------------- serde
-
-    def state_dict(self) -> dict:
-        return {
-            "config": dataclasses.asdict(self.config),
-            "workers": [dataclasses.asdict(w) for w in self.workers],
-            "global_batch": self.global_batch,
-            "iters_since_update": self._iters_since_update,
-            "num_updates": self.num_updates,
-        }
-
-    @classmethod
-    def from_state_dict(cls, state: dict) -> "DynamicBatchController":
-        ctrl = cls(
-            [w["batch"] for w in state["workers"]],
-            ControllerConfig(**state["config"]),
-        )
-        ctrl.workers = [WorkerState(**w) for w in state["workers"]]
-        ctrl.global_batch = state["global_batch"]
-        ctrl._iters_since_update = state["iters_since_update"]
-        ctrl.num_updates = state["num_updates"]
-        return ctrl
+__all__ = [
+    "BatchController",
+    "ControllerConfig",
+    "ControllerUpdate",
+    "DynamicBatchController",
+    "GainScheduledController",
+    "PIController",
+    "PIDController",
+    "ProportionalController",
+    "WorkerState",
+    "controller_from_state_dict",
+    "make_controller",
+]

@@ -60,22 +60,32 @@ def weighted_psum(local_grad_sum, local_weight_sum, axis_names):
 def accumulate_microbatch_grads(grad_fn, params, microbatches, masks):
     """Dynamic-trip-count gradient accumulation over (n_steps, m, ...) data.
 
-    `microbatches` is a pytree whose leaves have leading dims (n_steps, m);
-    `masks` is (n_steps, m). Returns (sum of masked per-example grad sums,
-    sum of mask weights, mean masked loss). Uses lax.scan so the compiled
-    program is independent of n_steps only through the data shape — the
-    multislice runtime re-slices the data per plan (cheap host-side reshape).
+    THE scan-accumulation implementation — the multislice trainer's hot path
+    and the SPMD accum train step both call it, so the carry/denominator
+    contract lives in exactly one place.
+
+    `grad_fn(params, batch, mask) -> ((loss_sum, w_sum, aux), grads)` with
+    grads of the weighted SUM loss (Eq. 2-3 contract); `microbatches` is a
+    pytree whose leaves have leading dims (n_steps, m); `masks` is
+    (n_steps, m).  Returns device-resident SUMS
+    ``(grad_sums, loss_sum, weight_sum, aux_weighted_sum)`` — the caller
+    divides by the weight sum once.  Uses lax.scan so the compiled program
+    depends on n_steps only through the stacked data shape — the multislice
+    runtime re-slices the data per plan (cheap host-side reshape).
     """
 
     def body(carry, xs):
-        g_acc, w_acc, l_acc = carry
+        g_acc, l_acc, w_acc, a_acc = carry
         batch, mask = xs
-        (loss_sum, w_sum), grads = grad_fn(params, batch, mask)
+        (loss_sum, w_sum, aux), grads = grad_fn(params, batch, mask)
         g_acc = jax.tree_util.tree_map(jnp.add, g_acc, grads)
-        return (g_acc, w_acc + w_sum, l_acc + loss_sum), None
+        return (g_acc, l_acc + loss_sum, w_acc + w_sum,
+                a_acc + aux * w_sum), None
 
-    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
-    (gsum, wsum, lsum), _ = jax.lax.scan(
-        body, (zeros, jnp.zeros(()), jnp.zeros(())), (microbatches, masks)
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, p.dtype), params)
+    z = jnp.zeros((), jnp.float32)
+    (gsum, lsum, wsum, asum), _ = jax.lax.scan(
+        body, (zeros, z, z, z), (microbatches, masks)
     )
-    return gsum, wsum, lsum
+    return gsum, lsum, wsum, asum

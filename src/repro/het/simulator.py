@@ -114,6 +114,22 @@ class ClusterSim:
     def throughput(self, k: int, batch: int) -> float:
         return batch / self.iteration_time(k, batch)
 
+    # -------------------------------------------------------- membership
+
+    def add_worker(self, spec: WorkerSpec) -> int:
+        """Admit a worker in place (appended last): the clock and the noise
+        stream continue — no reseed, no state rebuild."""
+        self.workers.append(spec)
+        return len(self.workers) - 1
+
+    def remove_worker(self, k: int) -> WorkerSpec:
+        """Fail-stop removal of worker k; remaining indices shift down."""
+        if not (0 <= k < len(self.workers)):
+            raise ValueError(f"no worker {k} in a {len(self.workers)}-cluster")
+        if len(self.workers) <= 1:
+            raise ValueError("cannot remove the last worker")
+        return self.workers.pop(k)
+
     # --------------------------------------------------------------- BSP
 
     def bsp_step(self, batches: Sequence[int]) -> dict:
@@ -138,26 +154,14 @@ class ClusterSim:
         an update = number of global updates applied between this worker's
         parameter read and its write (drives statistical-inefficiency
         modelling in the benchmarks).
+
+        The event loop itself lives in ``repro.train.engine.EventEngine``
+        (the single owner of (worker, next_done, version) queues); this is
+        a timing-only convenience wrapper kept for the benchmarks/tests.
         """
-        k = len(batches)
-        next_done = [self.iteration_time(i, batches[i]) + self.time
-                     for i in range(k)]
-        read_version = [0] * k
-        version = 0
-        log = []
-        while version < num_updates:
-            i = int(np.argmin(next_done))
-            now = next_done[i]
-            staleness = version - read_version[i]
-            log.append((now, i, staleness))
-            version += 1
-            read_version[i] = version
-            next_done[i] = now + self.iteration_time(i, batches[i], now)
-        self.time = max(self.time, max(next_done))
-        stale = [s for _, _, s in log]
-        return {"updates": log,
-                "mean_staleness": float(np.mean(stale)),
-                "max_staleness": int(max(stale))}
+        from repro.train.engine import EventEngine  # lazy: avoids an import cycle
+
+        return EventEngine(self).run_asp(batches, num_updates)
 
 
 # ------------------------------------------------------- cluster generators

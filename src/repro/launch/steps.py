@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.shapes import InputShape
+from repro.core import accumulate_microbatch_grads
 from repro.models import transformer as T
 from repro.models import encdec as E
 from repro.models.config import ModelConfig
@@ -109,17 +110,30 @@ def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
 # ------------------------------------------------------------------- steps
 
 
-def make_train_step(cfg: ModelConfig, optimizer: Optimizer):
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                    accum_steps: int = 1):
+    """Compiled train step; ``accum_steps > 1`` splits the global batch into
+    that many microbatches and accumulates gradient SUMS in a ``lax.scan``
+    carry before the single optimizer update (execution layer, DESIGN.md §4:
+    trades peak activation memory for sequential steps).  The main
+    weighted-mean loss gradient is exact under accumulation; the auxiliary
+    (MoE load-balance) term becomes a weight-averaged per-microbatch aux —
+    routing fractions are computed per microbatch, not over the full batch,
+    so aux-bearing models differ slightly from ``accum_steps=1``."""
+
+    def _loss_terms(p, b):
+        if cfg.family == "encdec":
+            ls, ws, aux = E.encdec_loss(
+                p, cfg, b["frames"], b["tokens"], b["targets"], b["weights"])
+        else:
+            ls, ws, aux = T.lm_loss(
+                p, cfg, b["tokens"], b["targets"], b["weights"],
+                prefix_embeds=b.get("prefix"))
+        return ls, ws, aux
+
     def train_step(params, opt_state, step, batch):
         def loss_fn(p):
-            if cfg.family == "encdec":
-                ls, ws, aux = E.encdec_loss(
-                    p, cfg, batch["frames"], batch["tokens"],
-                    batch["targets"], batch["weights"])
-            else:
-                ls, ws, aux = T.lm_loss(
-                    p, cfg, batch["tokens"], batch["targets"],
-                    batch["weights"], prefix_embeds=batch.get("prefix"))
+            ls, ws, aux = _loss_terms(p, batch)
             mean = ls / jnp.maximum(ws, 1e-9)
             return mean + AUX_WEIGHT * aux, (ls, ws, aux)
 
@@ -129,7 +143,44 @@ def make_train_step(cfg: ModelConfig, optimizer: Optimizer):
         metrics = {"loss": loss, "aux": aux, "weight_sum": ws}
         return params, opt_state, metrics
 
-    return train_step
+    if accum_steps == 1:
+        return train_step
+
+    def accum_train_step(params, opt_state, step, batch):
+        def split(x):
+            if x.shape[0] % accum_steps:
+                raise ValueError(
+                    f"batch dim {x.shape[0]} not divisible by "
+                    f"accum_steps={accum_steps}")
+            return x.reshape((accum_steps, x.shape[0] // accum_steps)
+                             + x.shape[1:])
+
+        micro = jax.tree_util.tree_map(split, batch)
+
+        # differentiate the SUM form per microbatch; divide once at the end
+        # (Eq. 2-3 weighting for the main term — shared scan implementation
+        # with the multislice trainer via accumulate_microbatch_grads)
+        def sum_grad(p, mb, mb_weights):
+            def sum_loss(p_):
+                ls, ws, aux = _loss_terms(p_, mb)
+                return ls + AUX_WEIGHT * aux * ws, (ls, ws, aux)
+
+            (_, metas), g = jax.value_and_grad(sum_loss, has_aux=True)(p)
+            return metas, g
+
+        # per-example weights already live inside each microbatch; the
+        # helper's mask slot just re-passes them (unused by sum_grad)
+        g_sum, ls, ws, aux_w = accumulate_microbatch_grads(
+            sum_grad, params, micro, micro["weights"])
+        denom = jnp.maximum(ws, 1e-9)
+        grads = jax.tree_util.tree_map(lambda g: g / denom, g_sum)
+        aux = aux_w / denom
+        loss = ls / denom + AUX_WEIGHT * aux
+        params, opt_state = optimizer.update(params, grads, opt_state, step)
+        metrics = {"loss": loss, "aux": aux, "weight_sum": ws}
+        return params, opt_state, metrics
+
+    return accum_train_step
 
 
 def make_prefill_step(cfg: ModelConfig):

@@ -77,6 +77,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--microbatch", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--dead-band", type=float, default=0.05)
+    ap.add_argument("--controller", default="p",
+                    choices=["p", "pi", "pid", "gain"],
+                    help="control law: paper P, PI, full PID, or "
+                         "gain-scheduled PID (DESIGN.md §3)")
     ap.add_argument("--beyond-paper", action="store_true",
                     help="zero-cost resize controller variant (DESIGN.md §2)")
     ap.add_argument("--full-config", action="store_true")
@@ -101,6 +105,7 @@ def main(argv=None) -> dict:
         b0=args.b0, microbatch=args.microbatch, batching=args.batching,
         sync=args.sync, max_steps=args.steps, seed=args.seed,
         controller=ControllerConfig(dead_band=args.dead_band,
+                                    kind=args.controller,
                                     beyond_paper=args.beyond_paper))
     trainer = HeterogeneousTrainer(
         init_params=init_params, loss_and_grad=lag, next_batch=next_batch,

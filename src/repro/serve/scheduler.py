@@ -157,8 +157,10 @@ class ContinuousBatcher:
     # ----------------------------------------------------------- metrics
 
     def stats(self) -> dict:
-        lat = [len(r.tokens) and (r.started_step - r.arrived_step)
-               for r in self.finished]
+        # queue delay = steps between arrival and admission, independent of
+        # how many tokens the request went on to produce
+        lat = [r.started_step - r.arrived_step
+               for r in self.finished if r.started_step is not None]
         occ = np.mean([r is not None for r in self.active]) if self.active \
             else 0.0
         return {

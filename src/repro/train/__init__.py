@@ -1,6 +1,7 @@
+from repro.train.engine import EventEngine, WorkerEvent
 from repro.train.loop import HeterogeneousTrainer, StepRecord, TrainConfig
 from repro.train.elastic import ElasticTrainer
 from repro.train import metrics
 
-__all__ = ["ElasticTrainer", "HeterogeneousTrainer", "StepRecord",
-           "TrainConfig", "metrics"]
+__all__ = ["ElasticTrainer", "EventEngine", "HeterogeneousTrainer",
+           "StepRecord", "TrainConfig", "WorkerEvent", "metrics"]

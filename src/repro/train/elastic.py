@@ -6,12 +6,20 @@ of *different sizes* arrive later. This module extends the multislice
 trainer with membership events:
 
   * `remove_worker(k)` — preemption. The departed worker's batch share is
-    redistributed throughput-proportionally; the global batch is preserved
+    redistributed over the survivors; the global batch is preserved
     (the paper's Σb_k invariant), so training dynamics are unchanged.
   * `add_worker(spec)` — a replacement/spare joins. It starts from the
     current model (weights live on the surviving workers — no restart),
     gets a throughput-proportional slice of the global batch, and the
     controller re-equalizes iteration times from there.
+
+Membership events *carry controller state over* (tentpole layer 4):
+surviving workers keep their EWMA windows, adaptive ``b_max`` and
+last-throughput history instead of getting a fresh controller, so the
+control loop does not relearn the cluster after every preemption.  The
+simulator mutates in place (``ClusterSim.add_worker``/``remove_worker`` —
+clock and noise stream continue), and the event engine remaps its queue,
+so a membership change mid-ASP-run neither crashes nor drops workers.
 
 Membership changes are zero-cost for the model state (all-reduce data
 parallelism keeps full replicas), and the data pipeline's per-(worker,
@@ -20,15 +28,9 @@ index) determinism means re-assigned streams never skip or repeat examples.
 
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable
 
-import jax
-
-from repro.core import (
-    ControllerConfig,
-    DynamicBatchController,
-    largest_remainder_round,
-)
+from repro.core import largest_remainder_round
 from repro.het.simulator import ClusterSim, WorkerSpec
 from repro.train.loop import HeterogeneousTrainer, TrainConfig
 
@@ -38,56 +40,57 @@ class ElasticTrainer(HeterogeneousTrainer):
 
     def __init__(self, *, worker_specs: list[WorkerSpec], workload,
                  sim_seed: int = 0, **kw):
-        self._specs = list(worker_specs)
-        self._workload = workload
-        self._sim_seed = sim_seed
-        sim = ClusterSim(self._specs, workload, seed=sim_seed)
+        sim = ClusterSim(list(worker_specs), workload, seed=sim_seed)
         super().__init__(sim=sim, **kw)
         self.membership_log: list[tuple[int, str, int]] = []
 
     # ------------------------------------------------------------ events
 
-    def _rebuild_sim(self) -> None:
-        """New simulator over the current membership; clock carries over."""
-        t, it = self.sim.time, self.sim.iteration
-        self.sim = ClusterSim(self._specs, self._workload,
-                              seed=self._sim_seed + len(self.membership_log))
-        self.sim.time, self.sim.iteration = t, it
-        self.k = len(self._specs)
-
-    def _replan(self, batches_hint: Optional[list[int]] = None) -> None:
-        """Redistribute the invariant global batch over current members."""
-        total = self.controller.global_batch if self.controller else sum(
-            self.batches)
-        if batches_hint is None:
-            xput = [self.sim.throughput(i, max(total // self.k, 1))
-                    for i in range(self.k)]
-            s = sum(xput)
-            batches_hint = [total * x / s for x in xput]
-        new_batches = largest_remainder_round(batches_hint, total, lo=1)
-        self.batches = new_batches
-        if self.controller is not None:
-            cfg = self.controller.config
-            self.controller = DynamicBatchController(new_batches, cfg)
+    def _static_replan(self, total: int) -> list[int]:
+        """Throughput-proportional split of the INVARIANT global batch
+        (used only when no controller is attached).  ``total`` is the
+        pre-event global batch — never derived from the mutated list."""
+        xput = [self.sim.throughput(i, max(total // self.k, 1))
+                for i in range(self.k)]
+        s = sum(xput)
+        return largest_remainder_round([total * x / s for x in xput],
+                                       total, lo=1)
 
     def remove_worker(self, k: int) -> None:
         """Preemption of worker k (fail-stop; its batch share survives)."""
-        if len(self._specs) <= 1:
+        if self.k <= 1:
             raise ValueError("cannot remove the last worker")
         self.membership_log.append((self.step_idx, "remove", k))
-        del self._specs[k]
-        surviving = [b for i, b in enumerate(self.batches) if i != k]
-        self._rebuild_sim()
-        # redistribute the departed share proportionally to current batches
-        self._replan([b * 1.0 for b in surviving])
+        total = sum(self.batches)
+        self.sim.remove_worker(k)
+        self.engine.remove_worker(k)
+        self.k = len(self.sim.workers)
+        if self.controller is not None:
+            # survivors keep EWMA windows / adaptive b_max / throughput
+            # history; the departed share is reabsorbed proportionally
+            self.batches = self.controller.remove_worker(k)
+        else:
+            self.batches = self._static_replan(total)
 
     def add_worker(self, spec: WorkerSpec) -> None:
         """A (possibly different-sized) replacement joins; model state is
         already replicated on survivors — no restart, no checkpoint load."""
-        self.membership_log.append((self.step_idx, "add", len(self._specs)))
-        self._specs.append(spec)
-        self._rebuild_sim()
-        self._replan()
+        self.membership_log.append((self.step_idx, "add", self.k))
+        total = (self.controller.global_batch if self.controller is not None
+                 else sum(self.batches))
+        self.sim.add_worker(spec)
+        self.k = len(self.sim.workers)
+        # throughput-proportional share estimate for the newcomer
+        xput = [self.sim.throughput(i, max(total // self.k, 1))
+                for i in range(self.k)]
+        hint = total * xput[-1] / sum(xput)
+        if self.controller is not None:
+            self.batches = self.controller.add_worker(hint)
+        else:
+            self.batches = self._static_replan(total)
+        # the newcomer reads the CURRENT params (no staleness debt) and, if
+        # an ASP schedule is live, dispatches immediately
+        self.engine.add_worker(self.batches[-1], payload=self.params)
 
     # ------------------------------------------------------------- runs
 

@@ -3,16 +3,25 @@
 K workers (heterogeneous simulated slices) each process a variable mini-batch
 b_k as fixed-shape microbatches (core.batching); gradients are combined with
 lambda_k weights (core.grad); iteration times come from the cluster simulator
-(real SGD, simulated clock — DESIGN.md §2); the dynamic-batching controller
-(core.controller) replans {b_k} online.
+(real SGD, simulated clock — DESIGN.md §2); a pluggable dynamic-batching
+controller (core.control) replans {b_k} online.
+
+Layering (DESIGN.md §1):
+  * control   — core.control: P/PI/PID/gain-scheduled batch controllers;
+  * execution — this module's jitted scan-based gradient accumulation:
+    one compiled call per worker step over stacked fixed-shape microbatches,
+    one device→host transfer per worker step (DESIGN.md §4);
+  * sync      — train.engine: the event queue driving BSP and ASP;
+  * elasticity— train.elastic: membership events that preserve state.
 
 Batching policies (paper §III):
   * 'uniform'  — b_k = b0 for all workers (the baseline the paper beats);
   * 'static'   — open-loop throughput-proportional allocation (§III-B);
-  * 'dynamic'  — static or uniform init + closed-loop P-controller (§III-C).
+  * 'dynamic'  — static or uniform init + closed-loop controller (§III-C),
+                 law selected by ``TrainConfig.controller.kind``.
 
 Synchronisation: 'bsp' (barrier per iteration) or 'asp' (event-driven,
-per-worker stale updates).
+per-worker stale updates); both run through train.engine.
 """
 
 from __future__ import annotations
@@ -27,13 +36,15 @@ import numpy as np
 
 from repro.core import (
     ControllerConfig,
-    DynamicBatchController,
+    accumulate_microbatch_grads,
     combine_weighted,
+    make_controller,
     plan_microbatches,
     static_allocation,
 )
 from repro.het.simulator import ClusterSim
 from repro.optim.optimizers import Optimizer
+from repro.train.engine import EventEngine
 
 
 @dataclasses.dataclass
@@ -73,6 +84,13 @@ class HeterogeneousTrainer:
         microbatches and divides by the total weight once (exact Eq. 2-3
         weighting across variable microbatch counts).
     next_batch(worker, n) -> batch pytree with leading dim n.
+
+    Execution is one jitted ``lax.scan`` over the worker's stacked
+    microbatches per worker step: no per-microbatch Python dispatch, no
+    per-microbatch host sync.  ``accum_calls`` counts jitted invocations
+    and ``accum_traces`` counts (re)compilations — a new trace happens only
+    when a worker's microbatch *count* changes, never when only its batch
+    content changes.
     """
 
     def __init__(
@@ -94,15 +112,17 @@ class HeterogeneousTrainer:
         self.params = init_params(key)
         self.opt_state = optimizer.init(self.params)
         self.step_idx = 0
-        self._lag = jax.jit(loss_and_grad)
+        self._accum = self._build_accum(loss_and_grad)
         self._opt_update = jax.jit(optimizer.update)
         self.history: list[StepRecord] = []
         self.recompiles = 0
+        self.accum_calls = 0      # jitted executions (one per worker step)
+        self.accum_traces = 0     # XLA traces (one per distinct n_steps)
+        self.engine = EventEngine(sim)
         self.batches = self._initial_batches()
         self.controller = None
         if cfg.batching == "dynamic":
-            self.controller = DynamicBatchController(self.batches,
-                                                     cfg.controller)
+            self.controller = make_controller(self.batches, cfg.controller)
 
     # ------------------------------------------------------------- planning
 
@@ -118,26 +138,43 @@ class HeterogeneousTrainer:
 
     # ------------------------------------------------------------ gradients
 
+    def _build_accum(self, loss_and_grad: Callable) -> Callable:
+        """Jitted scan over stacked (n_steps, m, ...) microbatches.
+
+        The scan carry accumulates gradient/loss/weight sums on device; the
+        mean gradient (divide once by the total weight, Eq. 2-3) comes back
+        with the loss sums in a single compiled call.  Buffers for the
+        stacked data and masks are donated where the backend supports it.
+        """
+
+        def accum(params, data, masks):
+            self.accum_traces += 1  # python side effect: runs at trace time
+            g_sum, loss_sum, w_sum, _aux = accumulate_microbatch_grads(
+                loss_and_grad, params, data, masks)
+            # mean gradient over the worker's examples (divide ONCE)
+            g_mean = jax.tree_util.tree_map(
+                lambda g: g / jnp.maximum(w_sum, 1e-9), g_sum)
+            return g_mean, loss_sum, w_sum
+
+        # donation is a no-op (with a warning) on CPU; only ask for it where
+        # the backend can actually alias the stacked buffers
+        donate = () if jax.default_backend() == "cpu" else (1, 2)
+        return jax.jit(accum, donate_argnums=donate)
+
     def _worker_grad(self, worker: int, batch_size: int):
-        """Real gradients for worker's b_k examples via fixed-shape microbatches."""
+        """Real gradients for worker's b_k examples: ONE jitted call."""
         cfg = self.cfg
         plan = plan_microbatches(batch_size, cfg.microbatch)
         data = self.next_batch(worker, plan.padded_examples)
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.reshape(x, (plan.n_steps, cfg.microbatch)
+                                  + x.shape[1:]), data)
         masks = jnp.asarray(plan.masks())
-        g_sum = None
-        loss_sum = 0.0
-        w_sum = 0.0
-        for i in range(plan.n_steps):
-            mb = jax.tree_util.tree_map(
-                lambda x: x[i * cfg.microbatch:(i + 1) * cfg.microbatch], data)
-            (ls, ws, _aux), grads = self._lag(self.params, mb, masks[i])
-            g_sum = grads if g_sum is None else jax.tree_util.tree_map(
-                jnp.add, g_sum, grads)
-            loss_sum += float(ls)
-            w_sum += float(ws)
-        # mean gradient over the worker's examples
-        g_mean = jax.tree_util.tree_map(lambda g: g / max(w_sum, 1e-9), g_sum)
-        return g_mean, loss_sum, w_sum
+        g_mean, loss_sum, w_sum = self._accum(self.params, stacked, masks)
+        self.accum_calls += 1
+        # single device->host transfer per worker step (g_mean stays on device)
+        ls, ws = jax.device_get((loss_sum, w_sum))
+        return g_mean, float(ls), float(ws)
 
     # ------------------------------------------------------------------ BSP
 
@@ -152,7 +189,7 @@ class HeterogeneousTrainer:
         g = combine_weighted(grads, self.batches)
         self.params, self.opt_state = self._opt_update(
             self.params, g, self.opt_state, jnp.asarray(self.step_idx))
-        info = self.sim.bsp_step(self.batches)
+        info = self.engine.bsp_round(self.batches)
         adjusted = False
         if self.controller is not None:
             upd = self.controller.observe(info["worker_times"])
@@ -178,36 +215,26 @@ class HeterogeneousTrainer:
 
         True staleness: each worker's gradient is computed on the params it
         last read; the optimizer applies it whenever the worker finishes.
+        The event queue (who finishes when, at which version) lives in the
+        engine; this method only moves model state.
         """
-        if not hasattr(self, "_asp_state"):
-            self._asp_state = {
-                "read_params": [self.params] * self.k,
-                "next_done": [self.sim.iteration_time(i, self.batches[i])
-                              for i in range(self.k)],
-                "read_version": [0] * self.k,
-                "version": 0,
-            }
-        st = self._asp_state
-        i = int(np.argmin(st["next_done"]))
-        now = st["next_done"][i]
-        # gradient on stale params
+        eng = self.engine
+        if not eng.scheduled:
+            eng.asp_schedule(self.batches, payload=self.params)
+        ev = eng.asp_next(self.batches)
+        i = ev.worker
+        # gradient on stale params (the params this worker last read)
         saved = self.params
-        self.params = st["read_params"][i]
+        self.params = eng.get_payload(i)
         g, ls, ws = self._worker_grad(i, self.batches[i])
         self.params = saved
         lam = self.batches[i] / sum(self.batches)
         g = jax.tree_util.tree_map(lambda x: lam * self.k * x, g)
         self.params, self.opt_state = self._opt_update(
             self.params, g, self.opt_state, jnp.asarray(self.step_idx))
-        staleness = st["version"] - st["read_version"][i]
-        st["version"] += 1
-        st["read_version"][i] = st["version"]
-        st["read_params"][i] = self.params
-        st["next_done"][i] = now + self.sim.iteration_time(
-            i, self.batches[i], now)
-        self.sim.time = max(self.sim.time, now)
+        eng.set_payload(i, self.params)
         adjusted = False
-        if self.controller is not None and st["version"] % self.k == 0:
+        if self.controller is not None and eng.version % self.k == 0:
             # observe each worker's latest iteration time
             times = [self.sim.iteration_time(j, self.batches[j])
                      for j in range(self.k)]
@@ -216,9 +243,9 @@ class HeterogeneousTrainer:
             self.batches = upd.batches
         rec = StepRecord(
             step=self.step_idx, sim_time=self.sim.time,
-            iteration_time=float(now), loss=ls / max(ws, 1e-9),
+            iteration_time=float(ev.time), loss=ls / max(ws, 1e-9),
             batches=list(self.batches), adjusted=adjusted,
-            straggler_waste=float(staleness),
+            straggler_waste=float(ev.staleness),
         )
         self.history.append(rec)
         self.step_idx += 1

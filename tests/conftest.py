@@ -7,6 +7,22 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# Property tests use `hypothesis`; when it is not installed (the hermetic CI
+# container cannot pip-install), register the deterministic stub under the
+# same module name BEFORE test modules import it, so all modules collect.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+
+    _stub = type(sys)("hypothesis")
+    _stub.given = _hypothesis_stub.given
+    _stub.settings = _hypothesis_stub.settings
+    _stub.strategies = _hypothesis_stub
+    sys.modules["hypothesis"] = _stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub
+
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: multi-second integration tests")

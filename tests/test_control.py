@@ -1,0 +1,213 @@
+"""Control-layer tests: pluggable P/PI/PID/gain controllers + state-preserving
+membership (tentpole layers 1 and 4)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ControllerConfig,
+    DynamicBatchController,
+    GainScheduledController,
+    PIController,
+    PIDController,
+    controller_from_state_dict,
+    make_controller,
+)
+
+
+def times_for(batches, throughputs):
+    return [b / x for b, x in zip(batches, throughputs)]
+
+
+def run_step_change(kind, scale=1, change_at=10, total=40):
+    """Deterministic step-change availability trace; returns
+    (adjustments after the change, controller, final max/min time ratio)."""
+    ctrl = make_controller([16 * scale, 32 * scale, 48 * scale],
+                           ControllerConfig(kind=kind))
+    xput = [1.0, 2.0, 3.0]
+    n_after = 0
+    for it in range(total):
+        if it == change_at:
+            xput = [1.0, 2.0, 1.5]  # worker 2 throttled 2x (interference)
+        upd = ctrl.observe(times_for(ctrl.batches, xput))
+        if it >= change_at and upd.updated:
+            n_after += 1
+    t = times_for(ctrl.batches, xput)
+    return n_after, ctrl, max(t) / min(t)
+
+
+# ------------------------------------------------------------ plugin wiring
+
+
+def test_factory_selects_kind():
+    assert isinstance(make_controller([8, 8]), DynamicBatchController)
+    assert isinstance(
+        make_controller([8, 8], ControllerConfig(kind="pi")), PIController)
+    assert isinstance(
+        make_controller([8, 8], ControllerConfig(kind="pid")), PIDController)
+    assert isinstance(
+        make_controller([8, 8], ControllerConfig(kind="gain")),
+        GainScheduledController)
+    with pytest.raises(ValueError):
+        ControllerConfig(kind="fuzzy")
+
+
+def test_state_roundtrip_restores_kind():
+    ctrl = make_controller([16, 32, 48], ControllerConfig(kind="pid"))
+    xput = [1.0, 2.0, 3.0]
+    for _ in range(8):
+        ctrl.observe(times_for(ctrl.batches, xput))
+    clone = controller_from_state_dict(ctrl.state_dict())
+    assert type(clone) is PIDController
+    assert clone.batches == ctrl.batches
+    for _ in range(5):
+        t = times_for(ctrl.batches, xput)
+        ctrl.observe(t)
+        clone.observe(t)
+    assert clone.batches == ctrl.batches
+
+
+# --------------------------------------------------- PID settling behaviour
+
+
+@pytest.mark.parametrize("scale", [1, 10])
+def test_pid_settles_in_half_the_adjustments_of_p(scale):
+    """Acceptance criterion: on a step-change trace the PID variant reaches
+    equal iteration times in <= half the readjustments the P law needs
+    (derivative lead cancels the EWMA filter lag)."""
+    p_adj, _, p_ratio = run_step_change("p", scale)
+    pid_adj, _, pid_ratio = run_step_change("pid", scale)
+    assert p_ratio <= 1.06 and pid_ratio <= 1.06  # both settle
+    assert pid_adj >= 1
+    assert 2 * pid_adj <= p_adj, (pid_adj, p_adj)
+
+
+def test_gain_scheduled_retunes_and_settles_fast():
+    adj, ctrl, ratio = run_step_change("gain")
+    assert ctrl.num_retunes >= 1          # the shift was detected
+    assert ratio <= 1.06
+    assert adj <= run_step_change("p")[0]
+
+
+def test_pi_removes_steady_state_error_inside_dead_band():
+    """~4% persistent skew never clears P's 5% dead-band; the integral
+    accumulates it and rebalances."""
+    xput = [1.0, 1.04, 1.08]
+    outcomes = {}
+    for kind in ("p", "pi"):
+        ctrl = make_controller([320, 320, 320], ControllerConfig(kind=kind))
+        for _ in range(60):
+            ctrl.observe(times_for(ctrl.batches, xput))
+        t = times_for(ctrl.batches, xput)
+        outcomes[kind] = (ctrl.num_updates, max(t) / min(t))
+    assert outcomes["p"][0] == 0          # P never acts
+    assert outcomes["pi"][0] >= 1         # PI does
+    assert outcomes["pi"][1] < outcomes["p"][1] - 0.02
+
+
+# ------------------------------------------- state-preserving membership
+
+
+def _controller_with_learned_state():
+    """Drive a 3-worker controller until worker 2 learns an adaptive b_max
+    (memory cliff) and all EWMA windows are warm."""
+    cfg = ControllerConfig(dead_band=0.01, ewma_alpha=1.0)
+    ctrl = DynamicBatchController([32, 32, 32], cfg)
+
+    def cliff_xput(k, b):
+        base = [1.0, 2.0, 3.0][k]
+        if k == 2 and b > 40:  # memory cliff on the fast worker
+            base /= 3.0
+        return base
+
+    for _ in range(20):
+        ctrl.observe([b / cliff_xput(k, b) for k, b in enumerate(ctrl.batches)])
+    assert ctrl.workers[2].b_max is not None
+    return ctrl
+
+
+def test_remove_worker_preserves_survivor_state():
+    ctrl = _controller_with_learned_state()
+    g = ctrl.global_batch
+    kept = ctrl.workers[2]
+    learned_bmax = kept.b_max
+    learned_tput = kept.last_throughput
+
+    ctrl.remove_worker(0)
+
+    assert ctrl.k == 2
+    assert sum(ctrl.batches) == g                      # Σb_k invariant
+    assert ctrl.workers[1] is kept                     # same state object
+    assert ctrl.workers[1].b_max == learned_bmax       # adaptive bound kept
+    assert ctrl.workers[1].last_throughput == learned_tput
+    assert all(b >= 1 for b in ctrl.batches)
+
+
+def test_add_worker_conserves_global_and_keeps_survivors():
+    ctrl = _controller_with_learned_state()
+    g = ctrl.global_batch
+    survivors = list(ctrl.workers)
+    bmaxes = [w.b_max for w in ctrl.workers]
+
+    ctrl.add_worker(batch_hint=g / 4)
+
+    assert ctrl.k == 4
+    assert sum(ctrl.batches) == g                      # Σb_k invariant
+    for w, old, bm in zip(ctrl.workers[:3], survivors, bmaxes):
+        assert w is old
+        assert w.b_max == bm
+    newcomer = ctrl.workers[-1]
+    assert newcomer.ewma_time is None                  # fresh window
+    assert newcomer.b_max is None
+    assert newcomer.batch >= 1
+
+
+def test_remove_then_observe_continues_cleanly():
+    ctrl = _controller_with_learned_state()
+    g = ctrl.global_batch
+    ctrl.remove_worker(1)
+    xput = [1.0, 3.0]
+    for _ in range(10):
+        ctrl.observe(times_for(ctrl.batches, xput))
+        assert sum(ctrl.batches) == g
+
+
+def test_remove_last_worker_rejected():
+    ctrl = DynamicBatchController([8, 8])
+    ctrl.remove_worker(0)
+    with pytest.raises(ValueError):
+        ctrl.remove_worker(0)
+
+
+# --------------------------------------------------------- property tests
+
+
+@given(
+    kind=st.sampled_from(["p", "pi", "pid", "gain"]),
+    events=st.lists(st.sampled_from(["remove", "add", "observe"]),
+                    min_size=1, max_size=12),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=30, deadline=None)
+def test_membership_events_keep_invariants(kind, events, seed):
+    """Σb_k == global batch and b_k >= 1 through any controller-level
+    add/remove/observe sequence, for every control law."""
+    import random
+
+    rng = random.Random(seed)
+    ctrl = make_controller([24, 48, 24], ControllerConfig(kind=kind))
+    g = ctrl.global_batch
+    xput = [rng.uniform(0.5, 4.0) for _ in range(3)]
+    for ev in events:
+        if ev == "remove" and ctrl.k > 1:
+            i = rng.randrange(ctrl.k)
+            ctrl.remove_worker(i)
+            del xput[i]
+        elif ev == "add":
+            ctrl.add_worker()
+            xput.append(rng.uniform(0.5, 4.0))
+        else:
+            ctrl.observe(times_for(ctrl.batches, xput))
+        assert sum(ctrl.batches) == g
+        assert all(b >= 1 for b in ctrl.batches)
+        assert len(ctrl.batches) == len(xput) == ctrl.k

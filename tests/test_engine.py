@@ -1,0 +1,290 @@
+"""Sync/execution-layer tests: the event engine drives BSP/ASP/elastic, and
+the trainer issues exactly one jitted call per worker step (tentpole
+layers 2 and 3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ControllerConfig
+from repro.het import WORKLOADS, ClusterSim, WorkerSpec, hlevel_cluster
+from repro.models.simple import paper_workloads
+from repro.optim import sgd
+from repro.train import ElasticTrainer, EventEngine, HeterogeneousTrainer, TrainConfig
+
+
+# --------------------------------------------------------------- fixtures
+
+
+def _lag(wl):
+    def lag(params, batch, mask):
+        def lf(p):
+            ls, ws, aux = wl.loss_fn(p, batch, mask)
+            return ls, (ls, ws, aux)  # SUM loss: trainer divides by w_sum
+
+        (_, metas), g = jax.value_and_grad(lf, has_aux=True)(params)
+        return metas, g
+
+    return lag
+
+
+def _nb(wl, seed=7):
+    counters = {}
+
+    def nb(worker, n):
+        counters[worker] = counters.get(worker, 0) + 1
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + worker),
+                                 counters[worker])
+        return wl.make_batch(key, n)
+
+    return nb
+
+
+def _trainer(cls=HeterogeneousTrainer, batching="dynamic", sync="bsp",
+             steps=50, specs=None, **extra):
+    wl = paper_workloads()["linreg"]
+    specs = specs or [WorkerSpec(cores=4), WorkerSpec(cores=11),
+                      WorkerSpec(cores=24)]
+    kw = dict(
+        init_params=wl.init, loss_and_grad=_lag(wl), next_batch=_nb(wl),
+        optimizer=sgd(0.05),
+        cfg=TrainConfig(b0=32, microbatch=8, batching=batching, sync=sync,
+                        max_steps=steps,
+                        controller=ControllerConfig(dead_band=0.05)))
+    if cls is ElasticTrainer:
+        return ElasticTrainer(worker_specs=specs, workload=WORKLOADS["linreg"],
+                              **kw, **extra)
+    sim = ClusterSim(specs, WORKLOADS["linreg"], seed=0)
+    return HeterogeneousTrainer(sim=sim, **kw, **extra)
+
+
+class FakeSim:
+    """Deterministic, noise-free sim for pure event-queue tests."""
+
+    def __init__(self, speeds):
+        self.workers = list(speeds)
+        self.time = 0.0
+        self.iteration = 0
+
+    def iteration_time(self, k, batch, at_time=None):
+        return batch / self.workers[k]
+
+    def bsp_step(self, batches):
+        times = [self.iteration_time(k, b) for k, b in enumerate(batches)]
+        t = max(times)
+        self.time += t
+        self.iteration += 1
+        return {"worker_times": times, "iteration_time": t,
+                "straggler_waste": 0.0}
+
+
+# ------------------------------------------------- one jitted call per step
+
+
+def test_one_jitted_call_per_worker_step():
+    """Acceptance criterion: exactly one jitted execution per worker step,
+    however many microbatches the worker's batch decomposes into."""
+    tr = _trainer(batching="uniform", steps=4)
+    for _ in range(3):
+        tr.bsp_step()
+    assert tr.accum_calls == 3 * tr.k
+    # growing a batch from 4 to 40 means 1 -> 5 microbatches, still 1 call
+    tr.batches = [4, 40, 96]
+    tr.bsp_step()
+    assert tr.accum_calls == 4 * tr.k
+
+
+def test_retrace_only_on_new_microbatch_count():
+    """Changing batch *content* never retraces; only a new microbatch count
+    (a new stacked shape) does."""
+    tr = _trainer(batching="uniform", steps=8)
+    tr.batches = [32, 32, 32]     # 4 microbatches each
+    tr.bsp_step()
+    traces_after_first = tr.accum_traces
+    assert traces_after_first == 1    # one shared shape -> one trace
+    for _ in range(3):
+        tr.bsp_step()              # same shapes, fresh data
+    assert tr.accum_traces == traces_after_first
+    tr.batches = [16, 32, 48]      # 2/4/6 microbatches: two NEW shapes
+    tr.bsp_step()
+    assert tr.accum_traces == traces_after_first + 2
+
+
+def test_scan_grads_match_python_loop():
+    """The scan-accumulated worker gradient equals the seed's per-microbatch
+    Python loop (same data, same mean-of-weighted-sum semantics)."""
+    wl = paper_workloads()["linreg"]
+    lag = _lag(wl)
+    tr = _trainer(batching="uniform", steps=2)
+    batch_size = 28  # 3 full microbatches + remainder 4
+    data = tr.next_batch(0, 32)
+
+    from repro.core import plan_microbatches
+    plan = plan_microbatches(batch_size, 8)
+    masks = jnp.asarray(plan.masks())
+    # reference: seed-style host loop
+    g_sum, ls_sum, ws_sum = None, 0.0, 0.0
+    for i in range(plan.n_steps):
+        mb = jax.tree_util.tree_map(lambda x: x[i * 8:(i + 1) * 8], data)
+        (ls, ws, _), grads = lag(tr.params, mb, masks[i])
+        g_sum = grads if g_sum is None else jax.tree_util.tree_map(
+            jnp.add, g_sum, grads)
+        ls_sum += float(ls)
+        ws_sum += float(ws)
+    g_ref = jax.tree_util.tree_map(lambda g: g / max(ws_sum, 1e-9), g_sum)
+
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.reshape(x, (plan.n_steps, 8) + x.shape[1:]), data)
+    g_scan, ls_scan, ws_scan = tr._accum(tr.params, stacked, masks)
+
+    assert np.isclose(float(ls_scan), ls_sum, rtol=1e-5)
+    assert np.isclose(float(ws_scan), ws_sum, rtol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(g_ref),
+                    jax.tree_util.tree_leaves(g_scan)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------- event-queue logic
+
+
+def test_asp_pop_order_and_staleness():
+    sim = FakeSim([1.0, 2.0])          # worker 1 is 2x faster
+    eng = EventEngine(sim)
+    batches = [8, 8]
+    # completions: w1 at 4, 8, 12...; w0 at 8, 16...
+    ev = eng.asp_next(batches)
+    assert (ev.worker, ev.time, ev.staleness) == (1, 4.0, 0)
+    ev = eng.asp_next(batches)
+    assert (ev.worker, ev.time) == (0, 8.0)
+    assert ev.staleness == 1           # one update landed since w0's read
+    ev = eng.asp_next(batches)
+    assert (ev.worker, ev.time, ev.staleness) == (1, 8.0, 1)
+    assert sim.time == 8.0
+
+
+def test_engine_membership_remaps_queue():
+    sim = FakeSim([1.0, 2.0, 4.0])
+    eng = EventEngine(sim)
+    eng.asp_schedule([8, 8, 8])
+    eng.remove_worker(0)
+    sim.workers.pop(0)
+    assert eng.k == 2 and len(eng.next_done) == 2
+    sim.workers.append(8.0)   # the sim admits the worker first (as in
+    eng.add_worker(batch=8, payload="fresh")  # ElasticTrainer.add_worker)
+    assert eng.k == 3 and len(eng.next_done) == 3
+    assert eng.get_payload(2) == "fresh"
+    # newcomer reads the current version: zero staleness debt
+    assert eng.read_version[2] == eng.version
+    for _ in range(6):
+        ev = eng.asp_next([8, 8, 8])
+        assert 0 <= ev.worker < 3
+
+
+def test_bsp_runs_through_engine_version_counter():
+    tr = _trainer(batching="dynamic", steps=4)
+    for _ in range(4):
+        tr.bsp_step()
+    assert tr.engine.version == 4
+    assert tr.sim.iteration == 4
+
+
+# ---------------------------------------- elastic ASP regression (satellite)
+
+
+def test_asp_membership_change_mid_run_regression():
+    """Seed bug: ElasticTrainer._asp_state kept the old worker count after a
+    membership event, indexing out of bounds / dropping workers.  The engine
+    remaps its queue instead."""
+    tr = _trainer(cls=ElasticTrainer, sync="asp", steps=40)
+    total = sum(tr.batches)
+    out = tr.run_with_events(
+        {6: lambda t: t.remove_worker(2),
+         14: lambda t: t.add_worker(WorkerSpec(cores=12))},
+        max_steps=24)
+    assert len(out["final_batches"]) == 3
+    assert sum(out["final_batches"]) == total
+    # queue bookkeeping stayed consistent with membership
+    assert tr.engine.k == 3
+    assert len(tr.engine.next_done) == 3
+    assert len(tr.engine.payload) == 3
+    assert np.isfinite(out["final_loss"])
+
+
+def test_elastic_asp_remove_does_not_dispatch_ghost():
+    """After a removal the departed worker must never pop again."""
+    tr = _trainer(cls=ElasticTrainer, sync="asp", steps=40)
+    for _ in range(5):
+        tr.asp_step()
+    tr.remove_worker(1)
+    for _ in range(8):
+        rec = tr.asp_step()
+        assert len(rec.batches) == 2
+    assert tr.engine.k == 2
+
+
+def test_static_batching_membership_preserves_global_batch():
+    """Regression: with no controller attached (static/uniform batching) a
+    membership event must still conserve the global batch — the replan total
+    is captured before the member list mutates."""
+    tr = _trainer(cls=ElasticTrainer, batching="static", steps=20)
+    total = sum(tr.batches)
+    tr.bsp_step()
+    tr.remove_worker(2)
+    assert sum(tr.batches) == total
+    tr.bsp_step()
+    tr.add_worker(WorkerSpec(cores=12))
+    assert sum(tr.batches) == total
+    rec = tr.bsp_step()
+    assert sum(rec.batches) == total
+
+
+def test_accum_train_step_matches_single_step():
+    """launch.steps: accum_steps>1 reproduces the plain train step exactly
+    for aux-free models (shared scan accumulation, divide-once weighting)."""
+    from repro.configs import get_config
+    from repro.launch.steps import make_train_step
+    from repro.models import init_lm, reduced
+    from repro.optim import adam
+
+    cfg = reduced(get_config("gemma-2b"))
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    opt = adam(1e-3)
+    opt_state = opt.init(params)
+    b, s = 8, 16
+    key = jax.random.PRNGKey(1)
+    batch = {
+        "tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+        "targets": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+        "weights": jnp.ones((b,), jnp.float32),
+    }
+    step = jnp.zeros((), jnp.int32)
+    p1, _, m1 = jax.jit(make_train_step(cfg, opt))(
+        params, opt_state, step, batch)
+    p4, _, m4 = jax.jit(make_train_step(cfg, opt, accum_steps=4))(
+        params, opt_state, step, batch)
+    assert np.isclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-5)
+    assert float(m1["weight_sum"]) == float(m4["weight_sum"])
+    for a, c in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_controller_state_survives_membership_in_trainer():
+    """End-to-end layer-4 check: the trainer's controller keeps survivor
+    state across remove/add (no fresh-controller reset)."""
+    tr = _trainer(cls=ElasticTrainer, batching="dynamic", steps=40)
+    for _ in range(6):
+        tr.bsp_step()
+    ctrl = tr.controller
+    survivor_states = [ctrl.workers[0], ctrl.workers[1]]
+    tr.remove_worker(2)
+    assert tr.controller is ctrl                       # same controller
+    assert ctrl.workers == survivor_states             # same WorkerStates
+    tr.add_worker(WorkerSpec(cores=16))
+    assert tr.controller is ctrl
+    assert ctrl.workers[:2] == survivor_states
+    for _ in range(4):
+        tr.bsp_step()
+    assert sum(tr.batches) == ctrl.global_batch

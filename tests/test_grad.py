@@ -50,7 +50,8 @@ def test_combine_weighted_validates():
 def test_weighted_psum_equals_masked_mean():
     """spmd-mode combine: weighted psum over a 1-axis mesh shard_map."""
     from jax.sharding import Mesh, PartitionSpec as P
-    from jax import shard_map
+
+    from repro.compat import shard_map
 
     devs = np.array(jax.devices()[:1])
     mesh = Mesh(devs, ("data",))
