@@ -9,42 +9,23 @@
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ClusterSpec, Experiment, TrainConfig, paper_workload
 from repro.core import ControllerConfig
-from repro.het import WORKLOADS, ClusterSim, hlevel_cluster, traces
-from repro.models.simple import paper_workloads
+from repro.het import hlevel_cluster, traces
 from repro.optim import adam
-from repro.train import HeterogeneousTrainer, TrainConfig
 
 
-def _trainer(mode, workers, controller, steps, seed=0, workload="mnist-cnn"):
-    wl = paper_workloads()[workload]
-
-    def lag(params, batch, mask):
-        def lf(p):
-            ls, ws, aux = wl.loss_fn(p, batch, mask)
-            return ls, (ls, ws, aux)  # SUM loss: trainer divides by w_sum
-
-        (_, metas), g = jax.value_and_grad(lf, has_aux=True)(params)
-        return metas, g
-
-    counters = {}
-
-    def nb(worker, n):
-        counters[worker] = counters.get(worker, 0) + 1
-        key = jax.random.fold_in(jax.random.PRNGKey(seed + worker),
-                                 counters[worker])
-        return wl.make_batch(key, n)
-
-    sim = ClusterSim(workers, WORKLOADS[workload], seed=seed)
-    return HeterogeneousTrainer(
-        init_params=wl.init, loss_and_grad=lag, next_batch=nb,
-        optimizer=adam(2e-3), sim=sim,
-        cfg=TrainConfig(b0=32, microbatch=8, batching=mode, max_steps=steps,
-                        controller=controller))
+def _experiment(mode, workers, controller, steps, seed=0,
+                workload="mnist-cnn"):
+    return Experiment(
+        workload=paper_workload(workload, seed=seed),
+        cluster=ClusterSpec.explicit(workers, workload=workload, seed=seed),
+        optimizer=adam(2e-3),
+        config=TrainConfig(b0=32, microbatch=8, batching=mode,
+                           max_steps=steps, controller=controller),
+    )
 
 
 def controller_variants():
@@ -65,8 +46,7 @@ def controller_variants():
     for name, ctrl_cfg in variants.items():
         workers = hlevel_cluster(39, 4)
         workers[-1].trace = traces.step_interference(4.0, 1e9, 0.3)
-        tr = _trainer("dynamic", workers, ctrl_cfg, steps=50)
-        out = tr.run()
+        out = _experiment("dynamic", workers, ctrl_cfg, steps=50).run()
         # recovery: first adjustment after the interference hits
         hit_step = next((r.step for r in out["history"] if r.sim_time >= 4.0),
                         None)
@@ -87,10 +67,8 @@ def openloop_estimation_error():
     rows = []
     workers = hlevel_cluster(39, 6)
     # static policy fed raw core counts (ignores Amdahl) via init allocation:
-    tr_static = _trainer("static", workers, ControllerConfig(), steps=40)
-    out_s = tr_static.run()
-    tr_dyn = _trainer("dynamic", workers, ControllerConfig(), steps=40)
-    out_d = tr_dyn.run()
+    out_s = _experiment("static", workers, ControllerConfig(), steps=40).run()
+    out_d = _experiment("dynamic", workers, ControllerConfig(), steps=40).run()
     rows.append(("ablation/openloop/static_time", out_s["sim_time"],
                  f"batches={out_s['final_batches']}"))
     rows.append(("ablation/openloop/dynamic_time", out_d["sim_time"],

@@ -8,10 +8,9 @@ heterogeneity simulator (DESIGN.md §2).
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ClusterSpec, Experiment, TrainConfig, paper_workload
 from repro.core import ControllerConfig
 from repro.het import (
     WORKLOADS,
@@ -20,9 +19,7 @@ from repro.het import (
     homogeneous_cluster,
     mixed_gpu_cpu_cluster,
 )
-from repro.models.simple import paper_workloads
 from repro.optim import adam, sgd
-from repro.train import HeterogeneousTrainer, TrainConfig
 from repro.train.metrics import batch_trajectory, iteration_time_stats
 
 TARGETS = {"linreg": 0.02, "mnist-cnn": 0.9, "resnet": 1.7}
@@ -30,42 +27,17 @@ OPTS = {"linreg": lambda: sgd(0.05), "mnist-cnn": lambda: adam(2e-3),
         "resnet": lambda: adam(2e-3)}
 
 
-def _nb(wl, seed=100):
-    counters = {}
-
-    def nb(worker, n):
-        counters[worker] = counters.get(worker, 0) + 1
-        key = jax.random.fold_in(jax.random.PRNGKey(seed + worker),
-                                 counters[worker])
-        return wl.make_batch(key, n)
-
-    return nb
-
-
-def _lag(wl):
-    def lag(params, batch, mask):
-        def lf(p):
-            ls, ws, aux = wl.loss_fn(p, batch, mask)
-            return ls, (ls, ws, aux)  # SUM loss: trainer divides by w_sum
-
-        (_, (ls, ws, aux)), g = jax.value_and_grad(lf, has_aux=True)(params)
-        return (ls, ws, aux), g
-
-    return lag
-
-
 def _train(workload, workers, mode, *, steps=80, target=None, seed=0,
            controller=None, sync="bsp", b0=32):
-    wl = paper_workloads()[workload]
-    sim = ClusterSim(workers, WORKLOADS[workload], seed=seed)
-    cfg = TrainConfig(
-        b0=b0, microbatch=8, batching=mode, sync=sync, max_steps=steps,
-        target_loss=target, seed=seed,
-        controller=controller or ControllerConfig())
-    tr = HeterogeneousTrainer(
-        init_params=wl.init, loss_and_grad=_lag(wl), next_batch=_nb(wl),
-        optimizer=OPTS[workload](), sim=sim, cfg=cfg)
-    return tr.run()
+    return Experiment(
+        workload=paper_workload(workload, seed=100),
+        cluster=ClusterSpec.explicit(workers, workload=workload, seed=seed),
+        optimizer=OPTS[workload](),
+        config=TrainConfig(
+            b0=b0, microbatch=8, batching=mode, sync=sync, max_steps=steps,
+            target_loss=target, seed=seed,
+            controller=controller or ControllerConfig()),
+    ).run()
 
 
 # ---------------------------------------------------------------- figure 1

@@ -6,8 +6,9 @@ mid-run interference spike that the controller adapts to.
 
 This is the deliverable-(b) end-to-end example: real SGD on a real LM
 (llama-family, ~100M params), real data pipeline (Markov-mixture stream),
-checkpointing, and the paper's controller in the loop. Wall-clock comes
-from the calibrated cluster simulator (DESIGN.md §2: CPU-only container).
+checkpointing through the Session, and the paper's controller in the loop.
+Wall-clock comes from the calibrated cluster simulator (DESIGN.md §2:
+CPU-only container); all wiring goes through `repro.api` (DESIGN.md §10).
 """
 
 import argparse
@@ -17,16 +18,14 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 
-from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.api import ClusterSpec, Experiment, TrainConfig, lm_workload
+from repro.checkpoint import load_checkpoint
 from repro.configs import get_config
 from repro.core import ControllerConfig
 from repro.data import DataPipeline
-from repro.het import WORKLOADS, ClusterSim, hlevel_cluster, traces
-from repro.models import init_lm, lm_loss
+from repro.het import traces
 from repro.optim import adam
-from repro.train import HeterogeneousTrainer, TrainConfig
 
 
 def build(steps: int, batching: str, seed: int = 0, controller: str = "p"):
@@ -34,36 +33,20 @@ def build(steps: int, batching: str, seed: int = 0, controller: str = "p"):
     cfg = get_config("llama3-8b").with_(
         num_layers=8, d_model=512, num_heads=8, num_kv_heads=4, head_dim=64,
         d_ff=1408, vocab_size=8192)
-    seq_len = 128
+    pipe = DataPipeline(cfg, seq_len=128, num_workers=3, seed=seed)
 
-    pipe = DataPipeline(cfg, seq_len=seq_len, num_workers=3, seed=seed)
-
-    def loss_and_grad(params, batch, mask):
-        def lf(p):
-            ls, ws, aux = lm_loss(p, cfg, batch["tokens"], batch["targets"],
-                                  mask)
-            return ls, (ls, ws, aux)  # SUM loss: trainer divides by w_sum
-
-        (_, metas), g = jax.value_and_grad(lf, has_aux=True)(params)
-        return metas, g
-
-    workers = hlevel_cluster(39, 6)
-    # interference hits the largest worker mid-run
-    workers[-1].trace = traces.step_interference(200.0, 1e9, 0.35)
-    sim = ClusterSim(workers, WORKLOADS["transformer"], seed=seed)
-
-    trainer = HeterogeneousTrainer(
-        init_params=lambda k: init_lm(k, cfg),
-        loss_and_grad=loss_and_grad,
-        next_batch=pipe.next_batch,
+    experiment = Experiment(
+        workload=lm_workload(cfg, pipe),
+        # interference hits the largest worker mid-run
+        cluster=ClusterSpec.hlevel(39, 6, workload="transformer", seed=seed)
+            .with_trace(-1, traces.step_interference(200.0, 1e9, 0.35)),
         optimizer=adam(3e-4),
-        sim=sim,
-        cfg=TrainConfig(b0=8, microbatch=4, batching=batching,
-                        max_steps=steps, seed=seed,
-                        controller=ControllerConfig(dead_band=0.05,
-                                                    kind=controller)),
+        config=TrainConfig(b0=8, microbatch=4, batching=batching,
+                           max_steps=steps, seed=seed,
+                           controller=ControllerConfig(dead_band=0.05,
+                                                       kind=controller)),
     )
-    return cfg, pipe, trainer
+    return cfg, experiment
 
 
 def main():
@@ -79,10 +62,11 @@ def main():
 
     results = {}
     for mode in ("uniform", "dynamic"):
-        cfg, pipe, trainer = build(args.steps, mode, controller=args.controller)
+        cfg, experiment = build(args.steps, mode, controller=args.controller)
+        session = experiment.session()
         n_params = sum(x.size for x in jax.tree_util.tree_leaves(
-            trainer.params))
-        out = trainer.run()
+            session.params))
+        out = session.run()
         results[mode] = out
         print(f"\n=== {mode} batching ({n_params/1e6:.0f}M params) ===")
         for rec in out["history"][:: max(1, args.steps // 8)]:
@@ -93,14 +77,12 @@ def main():
         print(f"  final loss      : {out['final_loss']:.3f}")
         print(f"  adjustments     : {out['batch_adjustments']}")
         if mode == "dynamic":
-            save_checkpoint(args.ckpt,
-                            {"params": trainer.params},
-                            {"controller": trainer.controller.state_dict(),
-                             "data": pipe.state_dict(),
-                             "steps": out["steps"]})
+            session.save(args.ckpt, extra_meta={"arch": "llama3-8b@100M"})
             _, meta = load_checkpoint(args.ckpt)
+            ctrl_batches = [w["batch"]
+                            for w in meta["session"]["controller"]["workers"]]
             print(f"  checkpoint ok   : {args.ckpt} "
-                  f"(controller batches {meta['controller']['workers']})")
+                  f"(controller batches {ctrl_batches})")
 
     speedup = results["uniform"]["sim_time"] / results["dynamic"]["sim_time"]
     print(f"\nDynamic batching speedup at same step count: {speedup:.2f}x")

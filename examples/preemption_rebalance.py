@@ -2,17 +2,19 @@
 
   phase 1 — provider overcommitment throttles the big worker to 30%;
             the controller shrinks its batch (availability trace);
-  phase 2 — the worker is PREEMPTED outright: a real membership event
-            removes it, its batch share is reabsorbed by the survivors,
-            and the surviving workers KEEP their controller state
-            (EWMA windows, adaptive b_max, throughput history);
-  phase 3 — a half-size spare joins: another membership event gives it a
+  phase 2 — the worker is PREEMPTED outright: a `RemoveWorker` event in the
+            cluster schedule removes it, its batch share is reabsorbed by
+            the survivors, and the surviving workers KEEP their controller
+            state (EWMA windows, adaptive b_max, throughput history);
+  phase 3 — a half-size spare joins (`AddWorker`): the schedule gives it a
             throughput-proportional slice and the controller re-equalizes.
 
     PYTHONPATH=src python examples/preemption_rebalance.py
 
-Model state never restarts across events (all-reduce data parallelism keeps
-full replicas); the engine remaps its event queue in place.
+The membership schedule is declarative data on the ClusterSpec — no
+callback dict, no hand-driven loop.  Model state never restarts across
+events (all-reduce data parallelism keeps full replicas); the engine
+remaps its event queue in place.
 """
 
 import os
@@ -20,54 +22,43 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-
+from repro.api import (
+    AddWorker,
+    ClusterSpec,
+    Experiment,
+    RemoveWorker,
+    TrainConfig,
+    paper_workload,
+)
 from repro.core import ControllerConfig
-from repro.het import WORKLOADS, WorkerSpec, traces
-from repro.models.simple import paper_workloads
+from repro.het import WorkerSpec, traces
 from repro.optim import adam
-from repro.train import ElasticTrainer, TrainConfig
 
 
 def main():
-    wl = paper_workloads()["mnist-cnn"]
-
-    def lag(params, batch, mask):
-        def lf(p):
-            ls, ws, aux = wl.loss_fn(p, batch, mask)
-            return ls, (ls, ws, aux)  # SUM loss: trainer divides by w_sum
-
-        (_, metas), g = jax.value_and_grad(lf, has_aux=True)(params)
-        return metas, g
-
-    counters = {}
-
-    def nb(worker, n):
-        counters[worker] = counters.get(worker, 0) + 1
-        key = jax.random.fold_in(jax.random.PRNGKey(worker), counters[worker])
-        return wl.make_batch(key, n)
-
     # worker 2: throttled to 30% capacity from sim-time 2s on (provider
     # overcommitment); preempted at step 50 and replaced at step 80
-    workers = [
-        WorkerSpec(cores=8),
-        WorkerSpec(cores=16),
-        WorkerSpec(cores=24, trace=traces.step_interference(2.0, 1e9, 0.3)),
-    ]
-    trainer = ElasticTrainer(
-        worker_specs=workers, workload=WORKLOADS["mnist-cnn"], sim_seed=0,
-        init_params=wl.init, loss_and_grad=lag, next_batch=nb,
+    cluster = ClusterSpec.explicit(
+        [WorkerSpec(cores=8),
+         WorkerSpec(cores=16),
+         WorkerSpec(cores=24,
+                    trace=traces.step_interference(2.0, 1e9, 0.3))],
+        workload="mnist-cnn",
+    ).with_schedule(
+        RemoveWorker(step=50, worker=2),               # preemption
+        AddWorker(step=80, spec=WorkerSpec(cores=12)),  # spare joins
+    )
+    experiment = Experiment(
+        workload=paper_workload("mnist-cnn", seed=0),
+        cluster=cluster,
         optimizer=adam(2e-3),
-        cfg=TrainConfig(b0=32, microbatch=8, batching="dynamic",
-                        max_steps=120,
-                        controller=ControllerConfig(dead_band=0.05,
-                                                    kind="gain")))
-
-    events = {
-        50: lambda t: t.remove_worker(2),                     # preemption
-        80: lambda t: t.add_worker(WorkerSpec(cores=12)),     # spare joins
-    }
-    out = trainer.run_with_events(events, max_steps=120)
+        config=TrainConfig(b0=32, microbatch=8, batching="dynamic",
+                           max_steps=120,
+                           controller=ControllerConfig(dead_band=0.05,
+                                                       kind="gain")),
+    )
+    session = experiment.session()
+    out = session.run()
 
     print("sim-time  batches            (adjustments marked)")
     for rec in out["history"]:
@@ -78,9 +69,10 @@ def main():
             if rec.step in (50, 80):
                 marks.append("<- membership event")
             print(f"{rec.sim_time:7.1f}s  {rec.batches}   {' '.join(marks)}")
+    controller = session.trainer.controller
     print(f"\nmembership log : {out['membership_log']}")
-    print(f"adjustments    : {trainer.controller.num_updates}, "
-          f"retunes: {trainer.controller.num_retunes}")
+    print(f"adjustments    : {controller.num_updates}, "
+          f"retunes: {controller.num_retunes}")
     print(f"final batches  : {out['final_batches']} "
           f"(global {sum(out['final_batches'])} preserved)")
     print(f"final loss     : {out['final_loss']:.3f}")

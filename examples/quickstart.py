@@ -1,8 +1,8 @@
-"""Quickstart: the dynamic batching controller in 60 lines.
+"""Quickstart: the canonical new-API demo, ~20 lines of wiring.
 
 Three simulated heterogeneous workers train a linear-regression model; the
-controller discovers throughput-proportional batch sizes online (paper
-Fig. 4a) and cuts the iteration-time gap.
+dynamic-batching controller discovers throughput-proportional batch sizes
+online (paper Fig. 4a) and cuts the iteration-time gap.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,48 +12,23 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import DynamicBatchController
-from repro.het import WORKLOADS, ClusterSim, hlevel_cluster
-from repro.models.simple import paper_workloads
+from repro.api import ClusterSpec, Experiment, TrainConfig, paper_workload
 from repro.optim import sgd
-from repro.train import HeterogeneousTrainer, TrainConfig
 
 
 def main():
-    wl = paper_workloads()["linreg"]
-
-    def loss_and_grad(params, batch, mask):
-        def lf(p):
-            ls, ws, aux = wl.loss_fn(p, batch, mask)
-            return ls, (ls, ws, aux)  # SUM loss: trainer divides by w_sum
-
-        (_, metas), g = jax.value_and_grad(lf, has_aux=True)(params)
-        return metas, g
-
-    counters = {}
-
-    def next_batch(worker, n):
-        counters[worker] = counters.get(worker, 0) + 1
-        key = jax.random.fold_in(jax.random.PRNGKey(worker), counters[worker])
-        return wl.make_batch(key, n)
-
-    # a 39-core cluster split (4, 11, 24) — heterogeneity level 6
-    sim = ClusterSim(hlevel_cluster(39, 6), WORKLOADS["mnist-cnn"], seed=0)
-    trainer = HeterogeneousTrainer(
-        init_params=wl.init,
-        loss_and_grad=loss_and_grad,
-        next_batch=next_batch,
+    experiment = Experiment(
+        workload=paper_workload("linreg"),
+        # a 39-core cluster split (4, 11, 24) — heterogeneity level 6;
+        # iteration times follow the mnist-cnn cost model
+        cluster=ClusterSpec.hlevel(39, 6, workload="mnist-cnn"),
         optimizer=sgd(0.05),
-        sim=sim,
-        cfg=TrainConfig(b0=32, microbatch=8, batching="dynamic",
-                        max_steps=150, target_loss=0.02),
+        config=TrainConfig(b0=32, microbatch=8, batching="dynamic",
+                           max_steps=150, target_loss=0.02),
     )
-    out = trainer.run()
+    out = experiment.run()
 
-    print(f"worker cores      : {[w.cores for w in sim.workers]}")
+    print(f"worker cores      : {[w.cores for w in experiment.cluster.workers]}")
     print(f"initial batches   : {out['history'][0].batches}")
     print(f"converged batches : {out['final_batches']}  "
           f"(throughput-proportional)")

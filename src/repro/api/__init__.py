@@ -1,0 +1,63 @@
+"""Public API: declarative experiments for heterogeneous dynamic batching.
+
+One front door for training, elasticity, benchmarks, and the CLI:
+
+  * :mod:`repro.api.workload` — Workload protocol + adapters that implement
+    the SUM-gradient contract exactly once (``mean_loss_workload``,
+    ``sum_loss_workload``, ``paper_workload``, ``lm_workload``);
+  * :mod:`repro.api.cluster` — declarative ClusterSpec (h-level / mixed /
+    homogeneous / explicit) with typed membership-event schedules
+    (``AddWorker`` / ``RemoveWorker`` / ``At``);
+  * :mod:`repro.api.session` — the unified Session step-iterator + hooks
+    (logging, checkpoint-every-N, early stop, metric collection);
+  * :mod:`repro.api.experiment` — Experiment = workload + cluster + config,
+    with ``run()`` / ``session()`` entry points.
+
+See DESIGN.md §10 for the contracts; ``examples/quickstart.py`` is the
+canonical ~20-line demo.
+"""
+
+from repro.api.cluster import At, AddWorker, ClusterSpec, RemoveWorker
+from repro.api.experiment import Experiment
+from repro.api.session import (
+    CheckpointHook,
+    EarlyStopHook,
+    Hook,
+    LoggingHook,
+    MetricCollector,
+    Session,
+)
+from repro.api.workload import (
+    CounterBatchSource,
+    Workload,
+    lm_workload,
+    mean_loss_adapter,
+    mean_loss_workload,
+    paper_workload,
+    sum_loss_adapter,
+    sum_loss_workload,
+)
+from repro.train.loop import TrainConfig
+
+__all__ = [
+    "AddWorker",
+    "At",
+    "CheckpointHook",
+    "ClusterSpec",
+    "CounterBatchSource",
+    "EarlyStopHook",
+    "Experiment",
+    "Hook",
+    "LoggingHook",
+    "MetricCollector",
+    "RemoveWorker",
+    "Session",
+    "TrainConfig",
+    "Workload",
+    "lm_workload",
+    "mean_loss_adapter",
+    "mean_loss_workload",
+    "paper_workload",
+    "sum_loss_adapter",
+    "sum_loss_workload",
+]

@@ -1,0 +1,163 @@
+"""ClusterSpec: where to train — a declarative heterogeneous cluster.
+
+Describes the simulated cluster (worker resources, cost model, noise,
+availability traces) plus a first-class *membership schedule* — typed
+events replacing ``ElasticTrainer.run_with_events``'s ``{step: fn}`` dict
+of opaque callbacks.  A spec is data: it can be built repeatedly (every
+``build()`` returns a fresh :class:`~repro.het.simulator.ClusterSim` with
+a fresh jitter stream), printed, and stored alongside results.
+
+    cluster = (ClusterSpec.hlevel(39, 6, workload="mnist-cnn")
+               .with_trace(-1, traces.step_interference(2.0, 1e9, 0.3))
+               .with_schedule(RemoveWorker(step=50, worker=2),
+                              AddWorker(step=80, spec=WorkerSpec(cores=12))))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence, Union
+
+from repro.het.simulator import (
+    WORKLOADS,
+    ClusterSim,
+    WorkerSpec,
+    WorkloadModel,
+    hlevel_cluster,
+    homogeneous_cluster,
+    mixed_gpu_cpu_cluster,
+)
+
+# ------------------------------------------------------- membership events
+
+
+@dataclasses.dataclass(frozen=True)
+class RemoveWorker:
+    """Preemption: fail-stop removal of ``worker`` before ``step`` runs.
+
+    The departed worker's batch share is reabsorbed by the survivors (the
+    paper's Σb_k invariant); surviving workers keep their controller state.
+    """
+
+    step: int
+    worker: int
+
+    def apply(self, trainer) -> None:
+        trainer.remove_worker(self.worker)
+
+
+@dataclasses.dataclass(frozen=True)
+class AddWorker:
+    """A (possibly different-sized) replacement joins before ``step`` runs.
+
+    The newcomer starts from the current model replica and receives a
+    throughput-proportional slice of the invariant global batch.
+    """
+
+    step: int
+    spec: WorkerSpec
+
+    def apply(self, trainer) -> None:
+        trainer.add_worker(self.spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class At:
+    """Escape hatch: run an arbitrary ``fn(trainer)`` before ``step``.
+
+    For events the typed vocabulary doesn't cover (e.g. swapping an
+    availability trace mid-run).  Prefer the typed events — they are
+    inspectable data; this is an opaque callback.
+    """
+
+    step: int
+    fn: Callable
+
+    def apply(self, trainer) -> None:
+        self.fn(trainer)
+
+
+ClusterEvent = Union[AddWorker, RemoveWorker, At]
+
+
+# ------------------------------------------------------------ cluster spec
+
+
+@dataclasses.dataclass
+class ClusterSpec:
+    """Declarative description of a simulated heterogeneous cluster.
+
+    ``workload`` names the simulator *cost model* (a ``WORKLOADS`` key or a
+    :class:`WorkloadModel`) — how long an iteration takes; it is distinct
+    from the API-level :class:`~repro.api.workload.Workload`, which defines
+    the real SGD computation.
+    """
+
+    workers: list[WorkerSpec]
+    workload: Union[str, WorkloadModel] = "mnist-cnn"
+    noise: float = 0.02
+    seed: int = 0
+    schedule: list[ClusterEvent] = dataclasses.field(default_factory=list)
+
+    # ------------------------------------------------------- constructors
+
+    @classmethod
+    def explicit(cls, workers: Sequence[WorkerSpec], **kw) -> "ClusterSpec":
+        """From an explicit list of :class:`WorkerSpec`."""
+        return cls(workers=list(workers), **kw)
+
+    @classmethod
+    def hlevel(cls, total_cores: int, h_level: float, k: int = 3,
+               **kw) -> "ClusterSpec":
+        """K CPU workers, max/min core ratio = ``h_level``, same total
+        capacity (paper §IV-A)."""
+        return cls(workers=hlevel_cluster(total_cores, h_level, k), **kw)
+
+    @classmethod
+    def homogeneous(cls, total_cores: int, k: int = 3, **kw) -> "ClusterSpec":
+        """K equal workers — the paper's H=1 baseline."""
+        return cls(workers=homogeneous_cluster(total_cores, k), **kw)
+
+    @classmethod
+    def mixed_gpu_cpu(cls, **kw) -> "ClusterSpec":
+        """One P100-class GPU + one 48-core Xeon (paper §IV-B)."""
+        spec_kw = {k: kw.pop(k) for k in ("flops_split", "cpu_cores",
+                                          "amdahl_p") if k in kw}
+        return cls(workers=mixed_gpu_cpu_cluster(**spec_kw), **kw)
+
+    # ------------------------------------------------------------ builder
+
+    def with_trace(self, worker: int, trace) -> "ClusterSpec":
+        """Attach a dynamic availability trace to one worker (in place)."""
+        self.workers[worker].trace = trace
+        return self
+
+    def with_schedule(self, *events: ClusterEvent) -> "ClusterSpec":
+        """Append membership events; kept sorted by step (stable, so
+        same-step events apply in the order given)."""
+        for ev in events:
+            if not hasattr(ev, "step") or not hasattr(ev, "apply"):
+                raise TypeError(
+                    f"schedule events need .step and .apply(trainer); got "
+                    f"{ev!r} — use AddWorker/RemoveWorker/At")
+        self.schedule = sorted([*self.schedule, *events],
+                               key=lambda e: e.step)
+        return self
+
+    # ------------------------------------------------------------- build
+
+    @property
+    def sim_workload(self) -> WorkloadModel:
+        if isinstance(self.workload, WorkloadModel):
+            return self.workload
+        try:
+            return WORKLOADS[self.workload]
+        except KeyError:
+            raise ValueError(
+                f"unknown simulator workload {self.workload!r}; known: "
+                f"{sorted(WORKLOADS)}") from None
+
+    def build(self) -> ClusterSim:
+        """Fresh simulator: copy of the worker list, fresh jitter stream."""
+        return ClusterSim(list(self.workers), self.sim_workload,
+                          noise=self.noise, seed=self.seed)

@@ -1,0 +1,92 @@
+"""Experiment: the one front door for heterogeneous dynamic-batch training.
+
+An Experiment is pure description — *what* to train (:class:`Workload`),
+*where* (:class:`ClusterSpec`, including its membership schedule), *how*
+(:class:`~repro.train.loop.TrainConfig` + optimizer), and who watches
+(:class:`~repro.api.session.Hook`s).  ``build()`` wires the engine
+(``ElasticTrainer`` over the simulated cluster), ``session()`` hands back
+the unified step iterator, ``run()`` is the one-call path:
+
+    out = Experiment(
+        workload=paper_workload("mnist-cnn"),
+        cluster=ClusterSpec.hlevel(39, 6, workload="mnist-cnn"),
+        optimizer=adam(2e-3),
+        config=TrainConfig(b0=32, microbatch=8, batching="dynamic"),
+    ).run()
+
+The legacy constructors (``HeterogeneousTrainer``, ``ElasticTrainer``)
+remain importable as the internal engine, but every launcher, example and
+benchmark constructs runs through this module.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.api.cluster import ClusterSpec
+from repro.api.session import Hook, Session
+from repro.api.workload import Workload
+from repro.optim.optimizers import Optimizer
+from repro.train.elastic import ElasticTrainer
+from repro.train.loop import TrainConfig
+
+
+@dataclasses.dataclass
+class Experiment:
+    """Declarative experiment = workload + cluster + config + hooks."""
+
+    workload: Workload
+    cluster: ClusterSpec
+    optimizer: Optimizer
+    config: TrainConfig = dataclasses.field(default_factory=TrainConfig)
+    hooks: Sequence[Hook] = ()
+    _workload_state0: Optional[dict] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+
+    def build(self) -> ElasticTrainer:
+        """Construct the engine: an ElasticTrainer over a fresh simulator.
+
+        ElasticTrainer is byte-identical to HeterogeneousTrainer until a
+        membership event fires, so non-elastic experiments reproduce legacy
+        seeded histories exactly (tested by test_api golden-equivalence).
+        """
+        # the workload's batch source is stateful (per-worker cursors);
+        # rewind it to its state at first build so every run of this
+        # Experiment replays the same seeded data stream
+        if self.workload.state_dict and self.workload.load_state_dict:
+            if self._workload_state0 is None:
+                self._workload_state0 = copy.deepcopy(
+                    self.workload.state_dict())
+            else:
+                self.workload.load_state_dict(
+                    copy.deepcopy(self._workload_state0))
+        return ElasticTrainer(
+            sim=self.cluster.build(),
+            init_params=self.workload.init,
+            loss_and_grad=self.workload.loss_and_grad,
+            next_batch=self.workload.next_batch,
+            optimizer=self.optimizer,
+            cfg=self.config,
+        )
+
+    def session(self, hooks: Sequence[Hook] = (),
+                resume_from: Optional[str] = None) -> Session:
+        """A fresh Session (optionally restored from a checkpoint path)."""
+        session = Session(
+            self.build(),
+            schedule=self.cluster.schedule,
+            hooks=(*self.hooks, *hooks),
+            workload=self.workload,
+        )
+        if resume_from is not None:
+            session.restore(resume_from)
+        return session
+
+    def run(self, hooks: Sequence[Hook] = (),
+            resume_from: Optional[str] = None) -> dict:
+        """Build, run to completion, return the summary dict (legacy keys:
+        steps / sim_time / final_loss / reached_target / wall_time /
+        batch_adjustments / history / final_batches, + membership_log)."""
+        return self.session(hooks, resume_from=resume_from).run()

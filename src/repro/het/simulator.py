@@ -111,8 +111,26 @@ class ClusterSim:
         jitter = 1.0 + self.noise * float(self.rng.standard_normal())
         return (self.wl.t_sync + compute) * max(jitter, 0.1)
 
+    def peek_iteration_time(self, k: int, batch: int,
+                            at_time: Optional[float] = None) -> float:
+        """Expected iteration time WITHOUT drawing jitter.
+
+        ``iteration_time`` consumes the noise RNG stream — calling it just to
+        *observe* (controller inputs, open-loop allocation estimates, replans)
+        perturbs every subsequent simulated timing.  Observation goes through
+        this side-effect-free path; only actual simulated work should draw
+        from the jitter stream.
+        """
+        t = self.time if at_time is None else at_time
+        compute = self.per_sample_time(k, batch, t) * batch
+        return self.wl.t_sync + compute
+
     def throughput(self, k: int, batch: int) -> float:
         return batch / self.iteration_time(k, batch)
+
+    def peek_throughput(self, k: int, batch: int) -> float:
+        """Expected samples/sec — RNG-free (see ``peek_iteration_time``)."""
+        return batch / self.peek_iteration_time(k, batch)
 
     # -------------------------------------------------------- membership
 

@@ -10,6 +10,9 @@ batching policies selectable:
 Real SGD on the reduced config (CPU-feasible); wall-clock from the
 calibrated simulator; prints per-step records and a summary. Use
 --full-config to train the full-size config (requires real accelerators).
+
+All run construction goes through ``repro.api`` (DESIGN.md §10): the CLI
+parses flags into a declarative Experiment and drives a Session.
 """
 
 from __future__ import annotations
@@ -17,47 +20,13 @@ from __future__ import annotations
 import argparse
 import json
 
-import jax
-import jax.numpy as jnp
-
-from repro.checkpoint import save_checkpoint
+from repro.api import ClusterSpec, Experiment, TrainConfig, lm_workload
 from repro.configs import get_config, list_architectures
 from repro.core import ControllerConfig
 from repro.data import DataPipeline
-from repro.het import WORKLOADS, ClusterSim, hlevel_cluster, traces
-from repro.models import (
-    encdec_loss,
-    init_encdec,
-    init_lm,
-    lm_loss,
-    reduced,
-)
-from repro.optim import adam, momentum
-from repro.train import HeterogeneousTrainer, TrainConfig
-
-
-def build_model_fns(cfg, pipe: DataPipeline):
-    init = init_encdec if cfg.family == "encdec" else init_lm
-
-    def loss_and_grad(params, batch, mask):
-        def lf(p):
-            if cfg.family == "encdec":
-                ls, ws, aux = encdec_loss(p, cfg, batch["prefix"],
-                                          batch["tokens"], batch["targets"],
-                                          mask)
-            else:
-                ls, ws, aux = lm_loss(p, cfg, batch["tokens"],
-                                      batch["targets"], mask,
-                                      prefix_embeds=batch.get("prefix"))
-            return ls + 0.01 * aux * jnp.maximum(ws, 1.0), (ls, ws, aux)  # SUM semantics
-
-        (_, (ls, ws, aux)), g = jax.value_and_grad(lf, has_aux=True)(params)
-        return (ls, ws, aux), g
-
-    def init_params(key):
-        return init(key, cfg)
-
-    return init_params, loss_and_grad, pipe.next_batch
+from repro.het import traces
+from repro.models import reduced
+from repro.optim import adam
 
 
 def main(argv=None) -> dict:
@@ -92,26 +61,28 @@ def main(argv=None) -> dict:
     cfg = get_config(args.arch)
     if not args.full_config:
         cfg = reduced(cfg)
-    workers = hlevel_cluster(args.total_cores, args.hlevel, args.workers)
+
+    cluster = ClusterSpec.hlevel(args.total_cores, args.hlevel, args.workers,
+                                 workload="transformer", seed=args.seed)
     if args.interference:
-        workers[-1].trace = traces.step_interference(5.0, 1e9, 0.3)
-    sim = ClusterSim(workers, WORKLOADS["transformer"], seed=args.seed)
+        cluster.with_trace(-1, traces.step_interference(5.0, 1e9, 0.3))
 
     pipe = DataPipeline(cfg, seq_len=args.seq_len, num_workers=args.workers,
                         seed=args.seed)
-    init_params, lag, next_batch = build_model_fns(cfg, pipe)
+    experiment = Experiment(
+        workload=lm_workload(cfg, pipe, aux_weight=0.01),
+        cluster=cluster,
+        optimizer=adam(1e-3),
+        config=TrainConfig(
+            b0=args.b0, microbatch=args.microbatch, batching=args.batching,
+            sync=args.sync, max_steps=args.steps, seed=args.seed,
+            controller=ControllerConfig(dead_band=args.dead_band,
+                                        kind=args.controller,
+                                        beyond_paper=args.beyond_paper)),
+    )
 
-    tcfg = TrainConfig(
-        b0=args.b0, microbatch=args.microbatch, batching=args.batching,
-        sync=args.sync, max_steps=args.steps, seed=args.seed,
-        controller=ControllerConfig(dead_band=args.dead_band,
-                                    kind=args.controller,
-                                    beyond_paper=args.beyond_paper))
-    trainer = HeterogeneousTrainer(
-        init_params=init_params, loss_and_grad=lag, next_batch=next_batch,
-        optimizer=adam(1e-3), sim=sim, cfg=tcfg)
-
-    out = trainer.run()
+    session = experiment.session()
+    out = session.run()
     if not args.quiet:
         for rec in out["history"][:: max(1, args.steps // 10)]:
             print(f"  step {rec.step:4d} t={rec.sim_time:8.2f}s "
@@ -120,14 +91,7 @@ def main(argv=None) -> dict:
         print(json.dumps({k: v for k, v in out.items() if k != "history"},
                          default=str, indent=1))
     if args.ckpt:
-        save_checkpoint(args.ckpt, {
-            "params": trainer.params, "opt_state": trainer.opt_state,
-        }, {
-            "arch": args.arch, "step": out["steps"],
-            "controller": (trainer.controller.state_dict()
-                           if trainer.controller else None),
-            "data": pipe.state_dict(),
-        })
+        session.save(args.ckpt, extra_meta={"arch": args.arch})
         if not args.quiet:
             print(f"checkpoint -> {args.ckpt}")
     return out

@@ -38,9 +38,14 @@ from repro.train.loop import HeterogeneousTrainer, TrainConfig
 class ElasticTrainer(HeterogeneousTrainer):
     """HeterogeneousTrainer + dynamic worker membership."""
 
-    def __init__(self, *, worker_specs: list[WorkerSpec], workload,
-                 sim_seed: int = 0, **kw):
-        sim = ClusterSim(list(worker_specs), workload, seed=sim_seed)
+    def __init__(self, *, worker_specs: list[WorkerSpec] | None = None,
+                 workload=None, sim_seed: int = 0, sim: ClusterSim | None = None,
+                 **kw):
+        if sim is None:
+            if worker_specs is None or workload is None:
+                raise ValueError(
+                    "pass either sim= or (worker_specs=, workload=)")
+            sim = ClusterSim(list(worker_specs), workload, seed=sim_seed)
         super().__init__(sim=sim, **kw)
         self.membership_log: list[tuple[int, str, int]] = []
 
@@ -50,7 +55,7 @@ class ElasticTrainer(HeterogeneousTrainer):
         """Throughput-proportional split of the INVARIANT global batch
         (used only when no controller is attached).  ``total`` is the
         pre-event global batch — never derived from the mutated list."""
-        xput = [self.sim.throughput(i, max(total // self.k, 1))
+        xput = [self.sim.peek_throughput(i, max(total // self.k, 1))
                 for i in range(self.k)]
         s = sum(xput)
         return largest_remainder_round([total * x / s for x in xput],
@@ -80,8 +85,9 @@ class ElasticTrainer(HeterogeneousTrainer):
                  else sum(self.batches))
         self.sim.add_worker(spec)
         self.k = len(self.sim.workers)
-        # throughput-proportional share estimate for the newcomer
-        xput = [self.sim.throughput(i, max(total // self.k, 1))
+        # throughput-proportional share estimate for the newcomer (RNG-free
+        # peek: planning is observation, not simulated work)
+        xput = [self.sim.peek_throughput(i, max(total // self.k, 1))
                 for i in range(self.k)]
         hint = total * xput[-1] / sum(xput)
         if self.controller is not None:

@@ -62,6 +62,35 @@ class TrainConfig:
     seed: int = 0
     log_every: int = 50
 
+    _BATCHING = ("uniform", "static", "dynamic")
+    _SYNC = ("bsp", "asp")
+    _INIT_ALLOCATION = ("uniform", "static")
+
+    def __post_init__(self) -> None:
+        """Fail fast on typos: ``sync='asynch'`` used to silently run ASP's
+        else-branch; now every enum-like field is validated."""
+        if self.batching not in self._BATCHING:
+            raise ValueError(
+                f"batching must be one of {self._BATCHING}, got {self.batching!r}")
+        if self.sync not in self._SYNC:
+            raise ValueError(
+                f"sync must be one of {self._SYNC}, got {self.sync!r}")
+        if self.init_allocation not in self._INIT_ALLOCATION:
+            raise ValueError(f"init_allocation must be one of "
+                             f"{self._INIT_ALLOCATION}, got {self.init_allocation!r}")
+        if self.b0 < 1:
+            raise ValueError(f"b0 must be >= 1, got {self.b0}")
+        if self.microbatch < 1:
+            raise ValueError(f"microbatch must be >= 1, got {self.microbatch}")
+        if self.microbatch > self.b0:
+            raise ValueError(
+                f"microbatch ({self.microbatch}) must be <= b0 ({self.b0})")
+        if self.max_steps < 1:
+            raise ValueError(f"max_steps must be >= 1, got {self.max_steps}")
+        if not (0.0 < self.loss_ewma <= 1.0):
+            raise ValueError(
+                f"loss_ewma must be in (0, 1], got {self.loss_ewma}")
+
 
 @dataclasses.dataclass
 class StepRecord:
@@ -72,6 +101,7 @@ class StepRecord:
     batches: list
     adjusted: bool
     straggler_waste: float
+    worker_times: Optional[list] = None   # per-worker times (BSP rounds)
 
 
 class HeterogeneousTrainer:
@@ -132,8 +162,10 @@ class HeterogeneousTrainer:
             cfg.batching == "dynamic" and cfg.init_allocation == "uniform"
         ):
             return [cfg.b0] * self.k
-        # open-loop: proportional to modelled worker throughput at b0
-        xput = [self.sim.throughput(i, cfg.b0) for i in range(self.k)]
+        # open-loop: proportional to modelled worker throughput at b0.
+        # This is an *estimate*, not simulated work: use the RNG-free peek
+        # path so planning never perturbs the jitter stream.
+        xput = [self.sim.peek_throughput(i, cfg.b0) for i in range(self.k)]
         return static_allocation(xput, cfg.b0)
 
     # ------------------------------------------------------------ gradients
@@ -203,6 +235,7 @@ class HeterogeneousTrainer:
             batches=list(self.batches),
             adjusted=adjusted,
             straggler_waste=info["straggler_waste"],
+            worker_times=list(info["worker_times"]),
         )
         self.history.append(rec)
         self.step_idx += 1
@@ -235,8 +268,10 @@ class HeterogeneousTrainer:
         eng.set_payload(i, self.params)
         adjusted = False
         if self.controller is not None and eng.version % self.k == 0:
-            # observe each worker's latest iteration time
-            times = [self.sim.iteration_time(j, self.batches[j])
+            # observe each worker's expected iteration time — RNG-free peek:
+            # observation must not consume the jitter stream the engine's
+            # event schedule draws from
+            times = [self.sim.peek_iteration_time(j, self.batches[j])
                      for j in range(self.k)]
             upd = self.controller.observe(times)
             adjusted = upd.updated

@@ -1,0 +1,409 @@
+"""Declarative API tests: golden equivalence vs the legacy engine wiring,
+Session hook ordering, checkpoint-resume through the Session, TrainConfig
+validation, the RNG-free peek path, and per-worker metrics."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (
+    AddWorker,
+    CheckpointHook,
+    ClusterSpec,
+    EarlyStopHook,
+    Experiment,
+    Hook,
+    LoggingHook,
+    MetricCollector,
+    RemoveWorker,
+    TrainConfig,
+    mean_loss_workload,
+    paper_workload,
+)
+from repro.core import ControllerConfig
+from repro.het import WORKLOADS, ClusterSim, WorkerSpec, hlevel_cluster
+from repro.models.simple import paper_workloads
+from repro.optim import adam, sgd
+from repro.train import ElasticTrainer, HeterogeneousTrainer
+
+
+# ------------------------------------------------------- legacy-style wiring
+
+
+def _legacy_lag(wl):
+    def lag(params, batch, mask):
+        def lf(p):
+            ls, ws, aux = wl.loss_fn(p, batch, mask)
+            return ls, (ls, ws, aux)  # SUM loss: trainer divides by w_sum
+
+        (_, metas), g = jax.value_and_grad(lf, has_aux=True)(params)
+        return metas, g
+
+    return lag
+
+
+def _legacy_nb(wl, seed=100):
+    counters = {}
+
+    def nb(worker, n):
+        counters[worker] = counters.get(worker, 0) + 1
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + worker),
+                                 counters[worker])
+        return wl.make_batch(key, n)
+
+    return nb
+
+
+def _cfg(**kw):
+    kw.setdefault("b0", 32)
+    kw.setdefault("microbatch", 8)
+    kw.setdefault("batching", "dynamic")
+    kw.setdefault("max_steps", 12)
+    return TrainConfig(**kw)
+
+
+def _experiment(cfg, *, workload="linreg", h=6, schedule=(), seed=0):
+    cluster = ClusterSpec.hlevel(39, h, workload=workload, seed=seed)
+    if schedule:
+        cluster.with_schedule(*schedule)
+    return Experiment(
+        workload=paper_workload(workload, seed=100),
+        cluster=cluster,
+        optimizer=sgd(0.05) if workload == "linreg" else adam(2e-3),
+        config=cfg,
+    )
+
+
+def _assert_histories_identical(a, b):
+    assert len(a) == len(b)
+    for ra, rb in zip(a, b):
+        assert ra.step == rb.step
+        assert ra.loss == rb.loss                      # bit-for-bit
+        assert ra.sim_time == rb.sim_time
+        assert ra.iteration_time == rb.iteration_time
+        assert ra.batches == rb.batches
+        assert ra.adjusted == rb.adjusted
+        assert ra.straggler_waste == rb.straggler_waste
+
+
+# --------------------------------------------------------- golden equivalence
+
+
+def test_golden_equivalence_bsp():
+    """Seeded Experiment.run() == legacy HeterogeneousTrainer.run(), BSP."""
+    wl = paper_workloads()["linreg"]
+    legacy = HeterogeneousTrainer(
+        init_params=wl.init, loss_and_grad=_legacy_lag(wl),
+        next_batch=_legacy_nb(wl), optimizer=sgd(0.05),
+        sim=ClusterSim(hlevel_cluster(39, 6), WORKLOADS["linreg"], seed=0),
+        cfg=_cfg(target_loss=0.05, max_steps=60)).run()
+    new = _experiment(_cfg(target_loss=0.05, max_steps=60)).run()
+    _assert_histories_identical(legacy["history"], new["history"])
+    assert new["final_loss"] == legacy["final_loss"]
+    assert new["final_batches"] == legacy["final_batches"]
+    assert new["reached_target"] == legacy["reached_target"]
+    assert new["steps"] == legacy["steps"]
+    assert new["batch_adjustments"] == legacy["batch_adjustments"]
+
+
+def test_golden_equivalence_asp():
+    wl = paper_workloads()["linreg"]
+    legacy = HeterogeneousTrainer(
+        init_params=wl.init, loss_and_grad=_legacy_lag(wl),
+        next_batch=_legacy_nb(wl), optimizer=sgd(0.05),
+        sim=ClusterSim(hlevel_cluster(39, 6), WORKLOADS["linreg"], seed=0),
+        cfg=_cfg(sync="asp", max_steps=30)).run()
+    new = _experiment(_cfg(sync="asp", max_steps=30)).run()
+    _assert_histories_identical(legacy["history"], new["history"])
+    assert new["final_batches"] == legacy["final_batches"]
+
+
+def test_golden_equivalence_elastic_schedule():
+    """ClusterSpec schedule == legacy run_with_events {step: fn} dict."""
+    wl = paper_workloads()["linreg"]
+    legacy_tr = ElasticTrainer(
+        worker_specs=hlevel_cluster(39, 6), workload=WORKLOADS["linreg"],
+        init_params=wl.init, loss_and_grad=_legacy_lag(wl),
+        next_batch=_legacy_nb(wl), optimizer=sgd(0.05),
+        cfg=_cfg(max_steps=20))
+    legacy = legacy_tr.run_with_events(
+        {6: lambda t: t.remove_worker(2),
+         13: lambda t: t.add_worker(WorkerSpec(cores=12))},
+        max_steps=20)
+    new = _experiment(
+        _cfg(max_steps=20),
+        schedule=(RemoveWorker(step=6, worker=2),
+                  AddWorker(step=13, spec=WorkerSpec(cores=12)))).run()
+    _assert_histories_identical(legacy["history"], new["history"])
+    assert new["membership_log"] == legacy["membership_log"]
+    assert new["final_batches"] == legacy["final_batches"]
+    # the unified loop preserves the paper's invariant through both events
+    assert all(sum(r.batches) == 96 for r in new["history"])
+
+
+def test_session_honors_target_loss_with_schedule():
+    """run_with_events ignored target_loss; the Session must not."""
+    out = _experiment(
+        _cfg(max_steps=200, target_loss=0.05),
+        schedule=(RemoveWorker(step=6, worker=2),)).run()
+    assert out["reached_target"]
+    assert out["steps"] < 200
+
+
+# ----------------------------------------------------------------- workloads
+
+
+def test_mean_loss_workload_matches_sum_convention():
+    """A per-example mean-style loss must give the same training as the
+    hand-written SUM-convention closure for the same model."""
+
+    def per_example(params, batch):
+        pred = batch["x"] @ params["w"] + params["b"]
+        return 0.5 * (pred - batch["y"]) ** 2
+
+    wl = paper_workloads()["linreg"]
+    mean_wl = mean_loss_workload("linreg-mean", wl.init, per_example,
+                                 wl.make_batch, seed=100)
+    base = _experiment(_cfg(max_steps=8))
+    out_sum = base.run()
+    out_mean = dataclasses.replace(base, workload=mean_wl).run()
+    _assert_histories_identical(out_sum["history"], out_mean["history"])
+
+
+def test_experiment_is_rerunnable():
+    """run() twice on one Experiment must replay the same seeded data
+    stream (the batch-source cursors rewind on each build)."""
+    exp = _experiment(_cfg(max_steps=6))
+    first = exp.run()
+    second = exp.run()
+    _assert_histories_identical(first["history"], second["history"])
+
+
+def test_restore_rejects_seed_mismatch(tmp_path):
+    path = str(tmp_path / "seed.npz")
+    sess = _experiment(_cfg(max_steps=4)).session()
+    sess.step()
+    sess.save(path)
+    other = Experiment(
+        workload=paper_workload("linreg", seed=7),   # different data stream
+        cluster=ClusterSpec.hlevel(39, 6, workload="linreg"),
+        optimizer=sgd(0.05),
+        config=_cfg(max_steps=4))
+    with pytest.raises(ValueError, match="seed"):
+        other.session(resume_from=path)
+
+
+# -------------------------------------------------------------------- hooks
+
+
+class _Recorder(Hook):
+    def __init__(self, name, log):
+        self.name, self.log = name, log
+
+    def on_run_start(self, session):
+        self.log.append((self.name, "start", session.step_idx))
+
+    def on_membership(self, session, event):
+        self.log.append((self.name, "membership", session.step_idx,
+                         type(event).__name__))
+
+    def on_step(self, session, rec):
+        self.log.append((self.name, "step", rec.step))
+
+    def on_run_end(self, session, result):
+        self.log.append((self.name, "end", result["steps"]))
+
+
+def test_hook_ordering():
+    log = []
+    hooks = [_Recorder("a", log), _Recorder("b", log)]
+    _experiment(_cfg(max_steps=4),
+                schedule=(RemoveWorker(step=2, worker=2),)).run(hooks=hooks)
+    # run_start first, then steps 0..3 with the membership event firing
+    # BEFORE step 2 executes, then run_end; 'a' before 'b' at every point
+    expected = [("a", "start", 0), ("b", "start", 0)]
+    for s in range(4):
+        if s == 2:
+            expected += [("a", "membership", 2, "RemoveWorker"),
+                         ("b", "membership", 2, "RemoveWorker")]
+        expected += [("a", "step", s), ("b", "step", s)]
+    expected += [("a", "end", 4), ("b", "end", 4)]
+    assert log == expected
+
+
+def test_session_iterator_and_early_stop_hook():
+    exp = _experiment(_cfg(max_steps=50))
+    stopper = EarlyStopHook(lambda s, rec: rec.step >= 5)
+    session = exp.session(hooks=[stopper])
+    seen = [rec.step for rec in session]
+    assert seen == [0, 1, 2, 3, 4, 5]
+    assert stopper.triggered
+    assert session.step_idx == 6
+
+
+def test_logging_and_metric_hooks():
+    lines = []
+    mc = MetricCollector()
+    out = _experiment(_cfg(max_steps=6)).run(
+        hooks=[LoggingHook(every=2, emit=lines.append), mc])
+    assert len(lines) == 3  # steps 0, 2, 4
+    per = mc.summary["iteration_time"]["per_worker"]
+    assert len(per["p95"]) == 3 and all(p > 0 for p in per["p95"])
+    assert out["metrics"] is mc.summary
+
+
+# -------------------------------------------------------- checkpoint-resume
+
+
+def test_checkpoint_resume_bitwise(tmp_path):
+    """Save at step 6 via CheckpointHook, resume a fresh Session, and the
+    continued run must match an uninterrupted one bit-for-bit."""
+    path = str(tmp_path / "sess.npz")
+    exp = _experiment(_cfg(max_steps=14, batching="dynamic"))
+    straight = _experiment(_cfg(max_steps=14, batching="dynamic")).run()
+
+    hook = CheckpointHook(path, every=6, at_end=False)
+    first = exp.session(hooks=[hook])
+    for rec in first:
+        if rec.step == 7:  # saved after step 5 (every=6); run a bit past it
+            break
+    assert hook.saves == 1
+
+    resumed = _experiment(_cfg(max_steps=14, batching="dynamic")).session(
+        resume_from=path)
+    assert resumed.step_idx == 6
+    out = resumed.run()
+    assert out["steps"] == 14
+    tail = straight["history"][6:]
+    _assert_histories_identical(tail, out["history"])
+
+
+def test_checkpoint_resume_final_params_match(tmp_path):
+    path = str(tmp_path / "sess2.npz")
+    exp = _experiment(_cfg(max_steps=10))
+    sess = exp.session()
+    for rec in sess:
+        if rec.step == 4:
+            sess.save(path)
+            break
+    resumed = _experiment(_cfg(max_steps=10)).session(resume_from=path)
+    resumed.run()
+    straight = _experiment(_cfg(max_steps=10)).session()
+    straight.run()
+    for a, b in zip(jax.tree_util.tree_leaves(resumed.params),
+                    jax.tree_util.tree_leaves(straight.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_rejects_mismatched_cluster(tmp_path):
+    path = str(tmp_path / "sess3.npz")
+    sess = _experiment(_cfg(max_steps=4)).session()
+    sess.step()
+    sess.save(path)
+    two_worker = Experiment(
+        workload=paper_workload("linreg", seed=100),
+        cluster=ClusterSpec.explicit([WorkerSpec(cores=8),
+                                      WorkerSpec(cores=16)],
+                                     workload="linreg"),
+        optimizer=sgd(0.05),
+        config=_cfg(max_steps=4))
+    with pytest.raises(ValueError, match="workers"):
+        two_worker.session(resume_from=path)
+
+
+# ----------------------------------------------------- TrainConfig validation
+
+
+@pytest.mark.parametrize("kw", [
+    {"sync": "asynch"},
+    {"batching": "dynamc"},
+    {"init_allocation": "statik"},
+    {"b0": 0},
+    {"microbatch": 0},
+    {"b0": 4, "microbatch": 8},
+    {"max_steps": 0},
+    {"loss_ewma": 0.0},
+])
+def test_trainconfig_rejects_invalid(kw):
+    with pytest.raises(ValueError):
+        TrainConfig(**kw)
+
+
+def test_trainconfig_accepts_valid():
+    TrainConfig(b0=8, microbatch=8, batching="uniform", sync="asp",
+                init_allocation="uniform")
+
+
+def test_clusterspec_rejects_unknown_sim_workload():
+    with pytest.raises(ValueError, match="unknown simulator workload"):
+        ClusterSpec.hlevel(39, 6, workload="resnet-52").build()
+
+
+def test_clusterspec_rejects_untyped_schedule_entries():
+    with pytest.raises(TypeError, match="AddWorker/RemoveWorker/At"):
+        ClusterSpec.hlevel(39, 6).with_schedule((5, lambda t: None))
+
+
+# ------------------------------------------------------------ peek (RNG-free)
+
+
+def test_peek_does_not_consume_rng():
+    sim_a = ClusterSim(hlevel_cluster(39, 6), WORKLOADS["linreg"], seed=7)
+    sim_b = ClusterSim(hlevel_cluster(39, 6), WORKLOADS["linreg"], seed=7)
+    for _ in range(25):
+        sim_b.peek_iteration_time(0, 32)
+        sim_b.peek_throughput(2, 16)
+    # jitter stream unperturbed by observation
+    for k in range(3):
+        assert sim_a.iteration_time(k, 32) == sim_b.iteration_time(k, 32)
+
+
+def test_peek_matches_expected_time():
+    sim = ClusterSim(hlevel_cluster(39, 6), WORKLOADS["linreg"], noise=0.0,
+                     seed=0)
+    for k in range(3):
+        assert sim.peek_iteration_time(k, 32) == pytest.approx(
+            sim.iteration_time(k, 32))
+
+
+def test_asp_observation_is_side_effect_free():
+    """Two identical ASP runs where one does extra controller observations
+    between steps must keep identical event timing."""
+    out_a = _experiment(_cfg(sync="asp", max_steps=20, batching="dynamic")).run()
+    exp = _experiment(_cfg(sync="asp", max_steps=20, batching="dynamic"))
+    session = exp.session()
+    times = []
+    for rec in session:
+        # extra observation mid-run: must not perturb the jitter stream
+        session.trainer.sim.peek_iteration_time(0, 32)
+        times.append(rec.iteration_time)
+    assert times == [r.iteration_time for r in out_a["history"]]
+
+
+# ------------------------------------------------------------ per-worker p95
+
+
+def test_iteration_time_stats_per_worker():
+    from repro.train.metrics import iteration_time_stats
+
+    out = _experiment(_cfg(max_steps=8)).run()
+    stats = iteration_time_stats(out["history"], per_worker=True)
+    per = stats["per_worker"]
+    assert set(per) == {"mean", "p50", "p95", "max"}
+    assert len(per["p95"]) == 3
+    for k in range(3):
+        assert per["mean"][k] <= per["max"][k]
+        assert per["p95"][k] <= per["max"][k]
+
+
+def test_per_worker_stats_span_trailing_membership(tmp_path):
+    """After an elastic event the per-worker stats cover only the trailing
+    records whose worker count matches the final cluster."""
+    from repro.train.metrics import iteration_time_stats
+
+    out = _experiment(_cfg(max_steps=10),
+                      schedule=(RemoveWorker(step=5, worker=2),)).run()
+    per = iteration_time_stats(out["history"], per_worker=True)["per_worker"]
+    assert len(per["mean"]) == 2  # the 2-worker trailing span
