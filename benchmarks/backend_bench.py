@@ -1,0 +1,136 @@
+"""Sim-vs-mesh backend comparison (DESIGN.md §11).
+
+Runs the SAME declarative Experiment twice — once on ``SimBackend``
+(iteration times from the calibrated simulator) and once on ``MeshBackend``
+(ragged SPMD on a multi-device CPU mesh, controller fed measured step times
+with the cluster spec's heterogeneity emulated via time dilation) — and
+reports controller convergence plus recompile counts against the bucket-
+ladder bound.  Prints ``name,value,derived`` CSV like ``benchmarks/run.py``.
+
+    PYTHONPATH=src python benchmarks/backend_bench.py [--steps 40]
+
+The CI smoke job runs ``--steps 3`` as an end-to-end wiring check.  See
+``benchmarks/README.md`` for how to read the output.
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def _force_cpu_devices(n: int) -> None:
+    """Fake-device flags must land in XLA_FLAGS BEFORE jax initializes."""
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _COUNT_FLAG not in flags:
+        os.environ["XLA_FLAGS"] = f"{_COUNT_FLAG}={n} {flags}".strip()
+
+
+def _imbalance(record) -> float:
+    """max/min per-worker time in one BSP round — 1.0 = perfectly equalized,
+    the quantity the paper's controller drives down."""
+    times = record.worker_times
+    return max(times) / max(min(times), 1e-12)
+
+
+def _rows_for(name: str, session, out, growth: float) -> list:
+    trainer = session.trainer
+    hist = out["history"]
+    rows = [
+        (f"backend/{name}/steps", out["steps"], f"wall={out['wall_time']:.2f}s"),
+        (f"backend/{name}/adjustments", out["batch_adjustments"],
+         f"final_batches={out['final_batches']}"),
+        (f"backend/{name}/imbalance_first", _imbalance(hist[0]),
+         "max/min worker time, first round"),
+        (f"backend/{name}/imbalance_last", _imbalance(hist[-1]),
+         "max/min worker time, last round"),
+        (f"backend/{name}/recompiles", trainer.accum_traces,
+         f"jitted_calls={trainer.accum_calls}"),
+    ]
+    if hasattr(trainer, "worker_buckets"):  # mesh only
+        per_worker = [sorted(b) for b in trainer.worker_buckets]
+        worst = max(len(b) for b in per_worker)
+        # ladder rungs grow >= growth, so per-worker compiles are bounded by
+        # ceil(log_growth(bucket_max/bucket_min)) + 1 (DESIGN.md §11)
+        bound = max(
+            math.ceil(math.log(b[-1] / b[0], growth)) + 1 if len(b) > 1 else 1
+            for b in per_worker)
+        rows.append((f"backend/{name}/buckets_per_worker_max", worst,
+                     f"ladder_bound={bound} buckets={per_worker}"))
+        rows.append((f"backend/{name}/timing_reruns", trainer.timing_reruns,
+                     "compile-time exclusions"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--devices", type=int, default=8,
+                    help="fake CPU devices for the debug mesh")
+    ap.add_argument("--workload", default="linreg",
+                    choices=["linreg", "mnist-cnn", "resnet"])
+    ap.add_argument("--b0", type=int, default=32)
+    ap.add_argument("--hlevel", type=float, default=6.0)
+    ap.add_argument("--growth", type=float, default=1.25)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    _force_cpu_devices(args.devices)
+
+    from repro.api import (ClusterSpec, Experiment, MeshBackend, SimBackend,
+                           TrainConfig, paper_workload)
+    from repro.launch.mesh import make_debug_mesh
+    from repro.optim import adam, sgd
+
+    opt = {"linreg": lambda: sgd(0.05), "mnist-cnn": lambda: adam(2e-3),
+           "resnet": lambda: adam(2e-3)}[args.workload]
+
+    def experiment(backend):
+        return Experiment(
+            workload=paper_workload(args.workload),
+            cluster=ClusterSpec.hlevel(39, args.hlevel,
+                                       workload=args.workload,
+                                       seed=args.seed, backend=backend),
+            optimizer=opt(),
+            config=TrainConfig(b0=args.b0, microbatch=8, batching="dynamic",
+                               max_steps=args.steps, seed=args.seed),
+        )
+
+    mesh = make_debug_mesh(args.devices)
+    backends = [
+        SimBackend(),
+        MeshBackend(mesh=mesh, dilation="from-spec", growth=args.growth),
+    ]
+
+    print("name,value,derived")
+    allocations = {}
+    for backend in backends:
+        exp = experiment(backend)
+        session = exp.session()
+        out = session.run()
+        allocations[backend.name] = out["final_batches"]
+        for row_name, value, derived in _rows_for(backend.name, session, out,
+                                                  args.growth):
+            print(f"{row_name},{float(value):.4g},{derived}")
+
+    # how close do the two closed loops land? L1 distance between the
+    # normalized final allocations (0 = identical shares)
+    sim_b, mesh_b = allocations["sim"], allocations["mesh"]
+    if len(sim_b) == len(mesh_b):
+        s, m = sum(sim_b), sum(mesh_b)
+        l1 = sum(abs(a / s - b / m) for a, b in zip(sim_b, mesh_b))
+        print(f"backend/allocation_l1,{l1:.4g},"
+              f"sim={sim_b} mesh={mesh_b}")
+
+
+if __name__ == "__main__":
+    main()

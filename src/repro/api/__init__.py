@@ -8,15 +8,20 @@ One front door for training, elasticity, benchmarks, and the CLI:
   * :mod:`repro.api.cluster` — declarative ClusterSpec (h-level / mixed /
     homogeneous / explicit) with typed membership-event schedules
     (``AddWorker`` / ``RemoveWorker`` / ``At``);
+  * :mod:`repro.api.backend` — execution backends: ``SimBackend``
+    (simulated clock, the golden default) and ``MeshBackend`` (ragged SPMD
+    on a real JAX mesh, measured step times — DESIGN.md §11), selected via
+    ``ClusterSpec(backend=...)``;
   * :mod:`repro.api.session` — the unified Session step-iterator + hooks
     (logging, checkpoint-every-N, early stop, metric collection);
   * :mod:`repro.api.experiment` — Experiment = workload + cluster + config,
     with ``run()`` / ``session()`` entry points.
 
-See DESIGN.md §10 for the contracts; ``examples/quickstart.py`` is the
-canonical ~20-line demo.
+See DESIGN.md §10-§11 for the contracts; ``examples/quickstart.py`` is the
+canonical ~20-line demo and ``examples/mesh_train.py`` the sim-vs-mesh one.
 """
 
+from repro.api.backend import Backend, MeshBackend, SimBackend
 from repro.api.cluster import At, AddWorker, ClusterSpec, RemoveWorker
 from repro.api.experiment import Experiment
 from repro.api.session import (
@@ -42,6 +47,7 @@ from repro.train.loop import TrainConfig
 __all__ = [
     "AddWorker",
     "At",
+    "Backend",
     "CheckpointHook",
     "ClusterSpec",
     "CounterBatchSource",
@@ -49,9 +55,11 @@ __all__ = [
     "Experiment",
     "Hook",
     "LoggingHook",
+    "MeshBackend",
     "MetricCollector",
     "RemoveWorker",
     "Session",
+    "SimBackend",
     "TrainConfig",
     "Workload",
     "lm_workload",

@@ -1,0 +1,125 @@
+"""Execution backends: where an Experiment's training loop actually runs.
+
+A :class:`Backend` turns a declarative experiment (workload + cluster +
+config) into a trainer that :class:`~repro.api.session.Session` can drive.
+Two implementations (DESIGN.md §11):
+
+  * :class:`SimBackend` — the default: real SGD under the calibrated
+    heterogeneity *simulator* (``ClusterSim``).  Bit-for-bit the behavior
+    Experiments had before backends existed — seeded histories are golden.
+  * :class:`MeshBackend` — ragged SPMD on a real ``jax`` device mesh:
+    per-worker batches padded to a geometric bucket ladder, masked
+    ``weighted_psum`` aggregation, and the controller fed **measured**
+    (device-synced, EWMA-filtered) step times instead of simulated ones.
+
+Select per experiment via ``ClusterSpec(backend=...)``:
+
+    cluster = ClusterSpec.hlevel(39, 6, backend=MeshBackend())
+    Experiment(workload=..., cluster=cluster, ...).run()   # same code path
+
+The same ``Experiment`` runs unchanged on either backend; only the timing
+source (modelled vs measured) and the execution substrate differ.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, Sequence, Union, runtime_checkable
+
+from repro.train.elastic import ElasticTrainer
+from repro.train.mesh import MeshTrainer, dilation_from_specs
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Builds a Session-drivable trainer for an experiment.
+
+    The returned trainer must expose the loop surface ``Session`` drives:
+    ``cfg`` / ``bsp_step`` / ``asp_step`` / ``step_idx`` / ``history`` /
+    ``batches`` / ``controller`` / ``params`` / ``sim.time`` and the
+    membership methods ``add_worker`` / ``remove_worker``.
+    """
+
+    name: str
+
+    def build_trainer(self, *, workload, cluster, optimizer, cfg):
+        """``workload``: :class:`repro.api.workload.Workload`; ``cluster``:
+        :class:`repro.api.cluster.ClusterSpec`; ``cfg``: ``TrainConfig``."""
+        ...
+
+
+@dataclasses.dataclass
+class SimBackend:
+    """Real SGD, simulated clock (DESIGN.md §2) — the golden default."""
+
+    name: str = dataclasses.field(default="sim", init=False)
+
+    def build_trainer(self, *, workload, cluster, optimizer, cfg):
+        return ElasticTrainer(
+            sim=cluster.build(),
+            init_params=workload.init,
+            loss_and_grad=workload.loss_and_grad,
+            next_batch=workload.next_batch,
+            optimizer=optimizer,
+            cfg=cfg,
+        )
+
+
+@dataclasses.dataclass
+class MeshBackend:
+    """Ragged SPMD execution on a real JAX mesh (DESIGN.md §11).
+
+    ``mesh``: any mesh with a data axis (``launch.mesh.make_debug_mesh`` /
+    ``make_production_mesh``); ``None`` builds a 1-D data mesh over all
+    visible devices.  ``dilation`` controls heterogeneity emulation:
+
+      * ``None``        — honest measurement only (homogeneous hosts give
+                          near-equal times, so the controller converges to
+                          near-equal batches);
+      * ``"from-spec"`` — dilate worker k's measured time by the
+                          ``ClusterSpec``'s declared relative speed (Amdahl
+                          x flops), so the closed loop reproduces the
+                          simulated heterogeneity on real hardware;
+      * a sequence      — explicit per-worker factors.
+
+    ``growth`` is the bucket-ladder ratio (recompiles per worker are
+    bounded by ``ceil(log_growth(b_max/b_min)) + 1``); ``time_alpha`` the
+    measurement EWMA.  Checkpointing and ASP are not supported yet
+    (ROADMAP open items).
+    """
+
+    mesh: Optional[object] = None
+    dilation: Union[None, str, Sequence[float]] = None
+    growth: float = 1.25
+    time_alpha: float = 0.5
+    name: str = dataclasses.field(default="mesh", init=False)
+
+    def build_trainer(self, *, workload, cluster, optimizer, cfg):
+        from repro.launch.mesh import make_data_mesh
+
+        mesh = self.mesh if self.mesh is not None else make_data_mesh()
+        dilation_for_spec = None
+        if self.dilation is None:
+            worker_dilation = None
+        elif isinstance(self.dilation, str):
+            if self.dilation != "from-spec":
+                raise ValueError(
+                    f"dilation must be None, 'from-spec' or a sequence; "
+                    f"got {self.dilation!r}")
+            worker_dilation, dilation_for_spec = dilation_from_specs(
+                cluster.workers, amdahl_p=cluster.sim_workload.amdahl_p)
+        else:
+            worker_dilation = list(self.dilation)
+        return MeshTrainer(
+            mesh=mesh,
+            num_workers=len(cluster.workers),
+            init_params=workload.init,
+            loss_and_grad=workload.loss_and_grad,
+            next_batch=workload.next_batch,
+            optimizer=optimizer,
+            cfg=cfg,
+            growth=self.growth,
+            time_alpha=self.time_alpha,
+            worker_dilation=worker_dilation,
+            dilation_for_spec=dilation_for_spec,
+        )

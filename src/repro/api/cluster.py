@@ -16,7 +16,7 @@ a fresh jitter stream), printed, and stored alongside results.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence, Union
+from typing import Callable, Optional, Sequence, Union
 
 from repro.het.simulator import (
     WORKLOADS,
@@ -85,12 +85,21 @@ ClusterEvent = Union[AddWorker, RemoveWorker, At]
 
 @dataclasses.dataclass
 class ClusterSpec:
-    """Declarative description of a simulated heterogeneous cluster.
+    """Declarative description of a heterogeneous cluster.
 
     ``workload`` names the simulator *cost model* (a ``WORKLOADS`` key or a
     :class:`WorkloadModel`) — how long an iteration takes; it is distinct
     from the API-level :class:`~repro.api.workload.Workload`, which defines
     the real SGD computation.
+
+    ``backend`` selects the execution substrate (DESIGN.md §11): ``None``
+    means the default :class:`~repro.api.backend.SimBackend` (iteration
+    times from the calibrated simulator);
+    :class:`~repro.api.backend.MeshBackend` runs the same experiment on a
+    real JAX device mesh with measured step times.  The worker list always
+    defines the logical fleet (count + declared sizes); on a mesh backend
+    the declared sizes only matter when heterogeneity is being emulated
+    (``MeshBackend(dilation="from-spec")``).
     """
 
     workers: list[WorkerSpec]
@@ -98,6 +107,7 @@ class ClusterSpec:
     noise: float = 0.02
     seed: int = 0
     schedule: list[ClusterEvent] = dataclasses.field(default_factory=list)
+    backend: Optional[object] = None   # Backend protocol; None -> SimBackend
 
     # ------------------------------------------------------- constructors
 

@@ -25,11 +25,11 @@ import copy
 import dataclasses
 from typing import Optional, Sequence
 
+from repro.api.backend import SimBackend
 from repro.api.cluster import ClusterSpec
 from repro.api.session import Hook, Session
 from repro.api.workload import Workload
 from repro.optim.optimizers import Optimizer
-from repro.train.elastic import ElasticTrainer
 from repro.train.loop import TrainConfig
 
 
@@ -45,12 +45,16 @@ class Experiment:
     _workload_state0: Optional[dict] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
 
-    def build(self) -> ElasticTrainer:
-        """Construct the engine: an ElasticTrainer over a fresh simulator.
+    def build(self):
+        """Construct the engine on the cluster's execution backend.
 
-        ElasticTrainer is byte-identical to HeterogeneousTrainer until a
-        membership event fires, so non-elastic experiments reproduce legacy
-        seeded histories exactly (tested by test_api golden-equivalence).
+        The default :class:`~repro.api.backend.SimBackend` yields an
+        ElasticTrainer over a fresh simulator — byte-identical to
+        HeterogeneousTrainer until a membership event fires, so non-elastic
+        experiments reproduce legacy seeded histories exactly (tested by
+        test_api golden-equivalence).  ``ClusterSpec(backend=MeshBackend())``
+        yields a :class:`~repro.train.mesh.MeshTrainer` running the same
+        loop on a real JAX mesh (DESIGN.md §11).
         """
         # the workload's batch source is stateful (per-worker cursors);
         # rewind it to its state at first build so every run of this
@@ -62,11 +66,12 @@ class Experiment:
             else:
                 self.workload.load_state_dict(
                     copy.deepcopy(self._workload_state0))
-        return ElasticTrainer(
-            sim=self.cluster.build(),
-            init_params=self.workload.init,
-            loss_and_grad=self.workload.loss_and_grad,
-            next_batch=self.workload.next_batch,
+        backend = self.cluster.backend
+        if backend is None:
+            backend = SimBackend()
+        return backend.build_trainer(
+            workload=self.workload,
+            cluster=self.cluster,
             optimizer=self.optimizer,
             cfg=self.config,
         )

@@ -269,6 +269,17 @@ class Session:
 
     # ---------------------------------------------------------- checkpoint
 
+    def _require_checkpointable(self):
+        """Checkpointing needs the sim backend's state surface (engine
+        queue + simulator jitter RNG); mesh checkpoint/restore is a ROADMAP
+        open item (DESIGN.md §11)."""
+        t = self.trainer
+        if not (hasattr(t, "engine") and hasattr(t.sim, "rng")):
+            raise NotImplementedError(
+                "session checkpointing is implemented for SimBackend runs "
+                "only; MeshBackend checkpoint/restore is a ROADMAP open item")
+        return t
+
     def save(self, path: str, extra_meta: Optional[dict] = None) -> None:
         """Checkpoint the full session: model + optimizer + controller +
         simulator clock/RNG + engine counters + data-source cursors.
@@ -277,8 +288,12 @@ class Session:
         in-flight events and their stale parameter payloads are not
         persisted — an ASP resume redispatches all workers from the current
         params, like a real cluster restart would.)
+
+        Implemented for the sim backend; a MeshBackend session has no
+        simulator RNG/event-queue state to capture (DESIGN.md §11) and
+        raises until mesh checkpointing lands (ROADMAP open item).
         """
-        t = self.trainer
+        t = self._require_checkpointable()
         meta = {
             "session": {
                 "step": t.step_idx,
@@ -306,9 +321,9 @@ class Session:
 
     def restore(self, path: str) -> "Session":
         """Load a :meth:`save` checkpoint into this (freshly built) session."""
+        t = self._require_checkpointable()
         tree, meta = load_checkpoint(path)
         st = meta["session"]
-        t = self.trainer
         if len(st["batches"]) != t.k:
             raise ValueError(
                 f"checkpoint has {len(st['batches'])} workers, session has "

@@ -10,6 +10,8 @@ from repro.core.allocation import (
 from repro.core.batching import (
     BatchPlan,
     MicrobatchPlan,
+    bucket_ladder,
+    bucket_up,
     example_weight_vector,
     plan_cluster,
     plan_microbatches,
@@ -46,6 +48,8 @@ __all__ = [
     "ProportionalController",
     "WorkerState",
     "accumulate_microbatch_grads",
+    "bucket_ladder",
+    "bucket_up",
     "controller_from_state_dict",
     "make_controller",
     "combine_weighted",

@@ -15,6 +15,7 @@ mechanism that makes the paper's controller zero-cost on TPU (DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Sequence
 
 import numpy as np
@@ -81,6 +82,49 @@ class BatchPlan:
 
 def plan_cluster(batches: Sequence[int], microbatch: int) -> BatchPlan:
     return BatchPlan(tuple(plan_microbatches(b, microbatch) for b in batches))
+
+
+# ------------------------------------------------------------ bucket ladder
+#
+# The mesh execution backend (DESIGN.md §11) pads each worker's mini-batch
+# up to a *bucketed* shape so recompiles stay bounded while the controller
+# drifts b_k continuously.  Rungs grow geometrically (each rung >= growth x
+# the previous) and are rounded up to a multiple of `quantum` (the mesh
+# data-axis size, so every padded batch shards evenly):
+#
+#     r_0 = quantum * ceil(base / quantum)
+#     r_{j+1} = max(r_j + quantum, quantum * ceil(r_j * growth / quantum))
+#
+# Because r_{j+1} >= r_j * growth, the number of distinct rungs a worker can
+# visit while its batch ranges over [b_min, b_max] is at most
+# ceil(log_growth(bucket(b_max) / bucket(b_min))) + 1 = O(log(b_max/b_min))
+# — the compile-count bound the property tests assert.
+
+
+def bucket_up(batch: int, *, base: int = 1, growth: float = 1.25,
+              quantum: int = 1) -> int:
+    """Smallest ladder rung >= ``batch`` (see the ladder recurrence above)."""
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    if quantum < 1:
+        raise ValueError(f"quantum must be >= 1, got {quantum}")
+    if growth <= 1.0:
+        raise ValueError(f"growth must be > 1, got {growth}")
+    rung = quantum * -(-max(base, 1) // quantum)
+    while rung < batch:
+        rung = max(rung + quantum, quantum * math.ceil(rung * growth / quantum))
+    return rung
+
+
+def bucket_ladder(b_max: int, *, base: int = 1, growth: float = 1.25,
+                  quantum: int = 1) -> list[int]:
+    """All rungs up to (and covering) ``b_max`` — the set of compiled shapes
+    a worker can ever see while its batch stays within [1, b_max]."""
+    rungs = [bucket_up(1, base=base, growth=growth, quantum=quantum)]
+    while rungs[-1] < b_max:
+        rungs.append(max(rungs[-1] + quantum,
+                         quantum * math.ceil(rungs[-1] * growth / quantum)))
+    return rungs
 
 
 def example_weight_vector(

@@ -11,6 +11,13 @@ Two implementations:
     each shard contributes its local sum of example-gradients; dividing by
     the global *weight* sum (not the device count) realizes the weighted
     average in one all-reduce.
+
+Because the division is by the MASK-WEIGHT sum, padded rows (mask 0) drop
+out of both numerator and denominator — which is exactly what lets the mesh
+execution backend (`repro.train.mesh`, DESIGN.md §11) pad ragged per-worker
+batches up to bucketed shapes without perturbing the gradient: the padded
+result equals the unpadded `combine_weighted` combine bit-for-bit in exact
+arithmetic (allclose under fp32).
 """
 
 from __future__ import annotations

@@ -22,6 +22,14 @@ def make_debug_mesh(devices: int = 8):
     return jax.make_mesh((devices // 2, 2), ("data", "model"))
 
 
+def make_data_mesh(num_devices: int | None = None):
+    """1-D data-parallel mesh over the available devices — the default mesh
+    for :class:`repro.api.backend.MeshBackend` (degenerates gracefully to a
+    single CPU device in the test container)."""
+    n = len(jax.devices()) if num_devices is None else num_devices
+    return jax.make_mesh((n,), ("data",))
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """Axes carrying the batch dimension."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

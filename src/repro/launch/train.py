@@ -20,7 +20,13 @@ from __future__ import annotations
 import argparse
 import json
 
-from repro.api import ClusterSpec, Experiment, TrainConfig, lm_workload
+from repro.api import (
+    ClusterSpec,
+    Experiment,
+    MeshBackend,
+    TrainConfig,
+    lm_workload,
+)
 from repro.configs import get_config, list_architectures
 from repro.core import ControllerConfig
 from repro.data import DataPipeline
@@ -36,6 +42,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--batching", default="dynamic",
                     choices=["uniform", "static", "dynamic"])
     ap.add_argument("--sync", default="bsp", choices=["bsp", "asp"])
+    ap.add_argument("--backend", default="sim", choices=["sim", "mesh"],
+                    help="execution backend (DESIGN.md §11): 'sim' = "
+                         "simulated clock; 'mesh' = ragged SPMD on the real "
+                         "JAX mesh, controller fed measured step times "
+                         "(worker heterogeneity emulated from the cluster "
+                         "spec)")
     ap.add_argument("--workers", type=int, default=3)
     ap.add_argument("--total-cores", type=int, default=39)
     ap.add_argument("--hlevel", type=float, default=6.0)
@@ -62,8 +74,18 @@ def main(argv=None) -> dict:
     if not args.full_config:
         cfg = reduced(cfg)
 
+    backend = (MeshBackend(dilation="from-spec") if args.backend == "mesh"
+               else None)
+    if args.backend == "mesh" and args.ckpt:
+        ap.error("--ckpt requires the sim backend (mesh checkpointing is a "
+                 "ROADMAP open item)")
+    if args.backend == "mesh" and args.interference:
+        ap.error("--interference requires the sim backend: availability "
+                 "traces are a simulator concept, and MeshTrainer does not "
+                 "emulate them (its dilation factors are static)")
     cluster = ClusterSpec.hlevel(args.total_cores, args.hlevel, args.workers,
-                                 workload="transformer", seed=args.seed)
+                                 workload="transformer", seed=args.seed,
+                                 backend=backend)
     if args.interference:
         cluster.with_trace(-1, traces.step_interference(5.0, 1e9, 0.3))
 

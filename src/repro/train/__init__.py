@@ -1,7 +1,9 @@
 from repro.train.engine import EventEngine, WorkerEvent
 from repro.train.loop import HeterogeneousTrainer, StepRecord, TrainConfig
 from repro.train.elastic import ElasticTrainer
+from repro.train.mesh import MeshTrainer
 from repro.train import metrics
 
 __all__ = ["ElasticTrainer", "EventEngine", "HeterogeneousTrainer",
-           "StepRecord", "TrainConfig", "WorkerEvent", "metrics"]
+           "MeshTrainer", "StepRecord", "TrainConfig", "WorkerEvent",
+           "metrics"]

@@ -1,0 +1,366 @@
+"""Ragged SPMD execution on a real JAX device mesh (DESIGN.md §11).
+
+`HeterogeneousTrainer` closes the dynamic-batching loop against the cluster
+*simulator*: real SGD, modelled wall-clock.  This module closes it against
+real hardware: K logical workers run on an actual ``jax`` mesh with *ragged*
+per-worker batch sizes, and the controller observes **measured** step times
+(device-synced wall clock, EWMA-filtered) instead of simulated ones.
+
+Execution model per BSP round:
+
+  * worker k's mini-batch b_k is padded up to a *bucketed* shape
+    ``bucket_up(b_k)`` (geometric ladder, ``core.batching`` — bounds XLA
+    recompiles to O(log(b_max/b_min)) while the controller drifts b_k
+    continuously); slots past b_k carry zero weight via the same validity
+    masks the simulator path uses for remainder microbatches;
+  * the padded batch's rows are sharded across the mesh **data axis**
+    (``shard_map``); each device computes the masked gradient sum of its
+    rows and :func:`repro.core.grad.weighted_psum` divides the cross-device
+    gradient sum by the mask-weight sum ONCE — so padding rows contribute
+    exactly zero and the SUM-gradient contract (DESIGN.md §4) is preserved
+    bit-for-bit relative to an unpadded computation;
+  * per-worker gradients are combined with the paper's lambda weights
+    (:func:`repro.core.grad.combine_weighted`), identical to the sim path;
+  * each worker's call is timed on the host around a device sync; samples
+    that triggered a fresh XLA trace are re-executed once so compile time
+    never pollutes the control signal; an EWMA filter (``time_alpha``)
+    smooths scheduler jitter before the controller's own filtering.
+
+Workers time-multiplex the mesh (dispatched sequentially, each batch
+striped across the full data axis).  On a multi-host mesh the natural
+extension is concurrent dispatch onto disjoint data-axis slices — tracked
+as a ROADMAP open item; the controller/aggregation contracts here are
+unchanged by that move.
+
+Optional ``worker_dilation`` multiplies worker k's *measured* time by a
+constant factor — emulating a heterogeneous fleet (OmniLearn-style slow
+executors) on homogeneous host hardware so the closed loop can be exercised
+end-to-end.  The computation itself is always real.
+"""
+
+from __future__ import annotations
+
+import math
+import time as _time
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import (
+    bucket_up,
+    combine_weighted,
+    largest_remainder_round,
+    make_controller,
+    static_allocation,
+)
+from repro.core.grad import weighted_psum
+from repro.het.simulator import WorkerSpec
+from repro.launch.mesh import data_axes
+from repro.optim.optimizers import Optimizer
+from repro.train.loop import StepRecord, TrainConfig
+
+
+class _MeshClock:
+    """Duck-typed stand-in for ``ClusterSim``'s clock: ``Session`` and the
+    metrics only need ``.time`` (here: accumulated measured barrier time)."""
+
+    def __init__(self) -> None:
+        self.time = 0.0
+        self.iteration = 0
+
+
+class MeshTrainer:
+    """Drives the dynamic-batching loop on a real JAX mesh (BSP only).
+
+    Presents the same surface as :class:`HeterogeneousTrainer` to
+    :class:`repro.api.session.Session` (``bsp_step`` / ``history`` /
+    ``batches`` / ``controller`` / membership events), but executes on
+    ``mesh`` and feeds the controller measured times.  Construct via
+    :class:`repro.api.backend.MeshBackend`, not directly.
+    """
+
+    def __init__(
+        self,
+        *,
+        mesh,
+        num_workers: int,
+        init_params: Callable,
+        loss_and_grad: Callable,
+        next_batch: Callable,
+        optimizer: Optimizer,
+        cfg: TrainConfig,
+        growth: float = 1.25,
+        time_alpha: float = 0.5,
+        worker_dilation: Optional[Sequence[float]] = None,
+        dilation_for_spec: Optional[Callable[[WorkerSpec], float]] = None,
+    ):
+        if cfg.sync != "bsp":
+            raise ValueError(
+                "MeshBackend supports sync='bsp' only (ASP needs per-worker "
+                "event timing the mesh runtime does not expose yet)")
+        if num_workers < 1:
+            raise ValueError("need at least one worker")
+        self.cfg = cfg
+        self.mesh = mesh
+        self._daxes = data_axes(mesh)
+        if not self._daxes:
+            raise ValueError(f"mesh {mesh.axis_names} has no data axis")
+        # padded batches must shard evenly over the data axis; the ladder
+        # base anchors at the sim path's microbatch so both backends pad in
+        # comparable quanta
+        self.quantum = int(math.prod(mesh.shape[a] for a in self._daxes))
+        self.bucket_base = self.quantum * -(-cfg.microbatch // self.quantum)
+        self.growth = growth
+        self.time_alpha = time_alpha
+        self.k = num_workers
+        if worker_dilation is not None and len(worker_dilation) != num_workers:
+            raise ValueError(
+                f"{len(worker_dilation)} dilation factors for "
+                f"{num_workers} workers")
+        self.dilation = ([1.0] * num_workers if worker_dilation is None
+                         else [float(d) for d in worker_dilation])
+        self._dilation_for_spec = dilation_for_spec
+        self.next_batch = next_batch
+        self.optimizer = optimizer
+        key = jax.random.PRNGKey(cfg.seed)
+        self.params = init_params(key)
+        self.opt_state = optimizer.init(self.params)
+        self.step_idx = 0
+        self.history: list[StepRecord] = []
+        self.membership_log: list[tuple[int, str, int]] = []
+        self.sim = _MeshClock()
+        # --- execution counters (mirror HeterogeneousTrainer's) ---
+        self.accum_calls = 0       # jitted training executions
+        self.accum_traces = 0      # XLA traces (one per distinct bucket)
+        self.timing_reruns = 0     # post-compile re-executions (timing only)
+        self.worker_buckets: list[set[int]] = [set() for _ in range(self.k)]
+        # --- measurement state ---
+        self._ewma: list[Optional[float]] = [None] * self.k
+        self._gradfn = self._build_gradfn(loss_and_grad)
+        self._opt_update = jax.jit(optimizer.update)
+        self.batches = self._initial_batches()
+        self.controller = None
+        if cfg.batching == "dynamic":
+            self.controller = make_controller(self.batches, cfg.controller)
+
+    # ------------------------------------------------------------- planning
+
+    def bucket(self, batch: int) -> int:
+        """This trainer's ladder rung for a batch of ``batch`` examples."""
+        return bucket_up(batch, base=self.bucket_base, growth=self.growth,
+                         quantum=self.quantum)
+
+    def _initial_batches(self) -> list[int]:
+        cfg = self.cfg
+        if cfg.batching == "uniform" or (
+            cfg.batching == "dynamic" and cfg.init_allocation == "uniform"
+        ):
+            return [cfg.b0] * self.k
+        # open-loop init on real hardware: a PROBE round (one measured step
+        # per worker at b0, gradients discarded) replaces the simulator's
+        # peek_throughput model — the mesh analogue of §III-B's estimate
+        times = [self._measured_worker_grad(k, cfg.b0)[3]
+                 for k in range(self.k)]
+        return static_allocation([cfg.b0 / t for t in times], cfg.b0)
+
+    # ------------------------------------------------------------ gradients
+
+    def _build_gradfn(self, loss_and_grad: Callable) -> Callable:
+        """Jitted shard_map: masked local grad sums + ``weighted_psum``.
+
+        Rows of the padded batch are sharded over the data axis; each shard
+        differentiates the masked SUM loss of its rows, and the single
+        cross-shard division by the global mask-weight sum realizes the
+        Eq. 2-3 weighted mean exactly (padding rows: mask 0 => zero grad,
+        zero weight).  One XLA trace per distinct bucket shape.
+        """
+        daxes = self._daxes
+
+        def worker_fn(params, batch, mask):
+            self.accum_traces += 1  # python side effect: runs at trace time
+            (loss_sum, w_sum, _aux), grads = loss_and_grad(
+                params, batch, mask)
+            g_mean = weighted_psum(grads, w_sum, daxes)
+            return (g_mean, jax.lax.psum(loss_sum, daxes),
+                    jax.lax.psum(w_sum, daxes))
+
+        sharded = shard_map(
+            worker_fn, self.mesh,
+            in_specs=(P(), P(daxes), P(daxes)),
+            out_specs=(P(), P(), P()),
+            # grads ARE replicated over non-data axes (identical inputs and
+            # deterministic compute per slice); 0.4's static rep-checker
+            # cannot always prove it, so the check is off
+            check_vma=False)
+        return jax.jit(sharded)
+
+    def _measured_worker_grad(self, worker: int, batch_size: int):
+        """One device-synced, timed gradient call for ``worker``.
+
+        Returns ``(g_mean, loss_sum, weight_sum, seconds)`` where seconds is
+        the compile-free, dilation-adjusted wall time of the execution.
+        """
+        bucket = self.bucket(batch_size)
+        self.worker_buckets[worker].add(bucket)
+        # fetch bucket-many examples and mask the tail — the same
+        # fetch-padded-then-mask idiom as the sim path's remainder
+        # microbatch, so the first b_k stream examples are identical to an
+        # unpadded fetch
+        data = self.next_batch(worker, bucket)
+        mask = jnp.asarray(
+            (jnp.arange(bucket) < batch_size), jnp.float32)
+        shard = NamedSharding(self.mesh, P(self._daxes))
+        data = jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, shard), data)
+        mask = jax.device_put(mask, shard)
+
+        traces_before = self.accum_traces
+        t0 = _time.perf_counter()
+        out = self._gradfn(self.params, data, mask)
+        jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
+        dt = _time.perf_counter() - t0
+        self.accum_calls += 1
+        if self.accum_traces > traces_before:
+            # first execution at this bucket paid for tracing+compilation;
+            # re-run once (pure function, result identical and discarded)
+            # so the controller never sees compile time
+            self.timing_reruns += 1
+            t0 = _time.perf_counter()
+            rerun = self._gradfn(self.params, data, mask)
+            jax.tree_util.tree_map(lambda x: x.block_until_ready(), rerun)
+            dt = _time.perf_counter() - t0
+        g_mean, loss_sum, w_sum = out
+        return g_mean, float(loss_sum), float(w_sum), dt * self.dilation[worker]
+
+    def _observe_time(self, worker: int, seconds: float) -> float:
+        """EWMA filter over measured step times (measurement pipeline; the
+        controller applies its own ``ewma_alpha`` smoothing on top)."""
+        prev = self._ewma[worker]
+        cur = seconds if prev is None else (
+            self.time_alpha * seconds + (1 - self.time_alpha) * prev)
+        self._ewma[worker] = cur
+        return cur
+
+    # ------------------------------------------------------------------ BSP
+
+    def bsp_step(self) -> StepRecord:
+        grads, losses, weights = [], 0.0, 0.0
+        raw_times, smoothed = [], []
+        for k in range(self.k):
+            g, ls, ws, dt = self._measured_worker_grad(k, self.batches[k])
+            grads.append(g)
+            losses += ls
+            weights += ws
+            raw_times.append(dt)
+            smoothed.append(self._observe_time(k, dt))
+        # Eq. 2-3: lambda-weighted combine (identical to the sim path)
+        g = combine_weighted(grads, self.batches)
+        self.params, self.opt_state = self._opt_update(
+            self.params, g, self.opt_state, jnp.asarray(self.step_idx))
+        # the record/clock keep the round's MEASURED times (same semantics
+        # as the sim backend's StepRecord); only the controller sees the
+        # EWMA-filtered view
+        t_iter = max(raw_times)
+        self.sim.time += t_iter
+        self.sim.iteration += 1
+        adjusted = False
+        if self.controller is not None:
+            upd = self.controller.observe(smoothed)
+            adjusted = upd.updated
+            self.batches = upd.batches
+        rec = StepRecord(
+            step=self.step_idx,
+            sim_time=self.sim.time,
+            iteration_time=t_iter,
+            loss=losses / max(weights, 1e-9),
+            batches=list(self.batches),
+            adjusted=adjusted,
+            straggler_waste=sum(t_iter - t for t in raw_times) / max(
+                len(raw_times) * t_iter, 1e-9),
+            worker_times=list(raw_times),
+        )
+        self.history.append(rec)
+        self.step_idx += 1
+        return rec
+
+    def asp_step(self) -> StepRecord:
+        raise NotImplementedError(
+            "MeshBackend is BSP-only; use SimBackend for ASP studies")
+
+    # ------------------------------------------------------------ membership
+
+    def _measured_replan(self, total: int) -> list[int]:
+        """Throughput-proportional split of the invariant global batch from
+        MEASURED times (no controller attached).  Workers without a
+        measurement yet (fresh joiners) get the mean throughput."""
+        xput = [self.batches[i] / self._ewma[i]
+                if i < len(self.batches) and self._ewma[i] else None
+                for i in range(self.k)]
+        known = [x for x in xput if x is not None] or [1.0]
+        mean = sum(known) / len(known)
+        xput = [mean if x is None else x for x in xput]
+        s = sum(xput)
+        return largest_remainder_round([total * x / s for x in xput],
+                                       total, lo=1)
+
+    def remove_worker(self, k: int) -> None:
+        """Preemption of worker k; its batch share is reabsorbed (Σb_k
+        invariant) and survivors keep controller + measurement state."""
+        if self.k <= 1:
+            raise ValueError("cannot remove the last worker")
+        if not (0 <= k < self.k):
+            raise ValueError(f"no worker {k} in a {self.k}-cluster")
+        self.membership_log.append((self.step_idx, "remove", k))
+        total = sum(self.batches)
+        del self._ewma[k], self.dilation[k], self.worker_buckets[k]
+        # keep survivor indices aligned with the measurement state before
+        # any replan reads batches[i]/ewma[i] pairs
+        self.batches = [b for j, b in enumerate(self.batches) if j != k]
+        self.k -= 1
+        if self.controller is not None:
+            self.batches = self.controller.remove_worker(k)
+        else:
+            self.batches = self._measured_replan(total)
+
+    def add_worker(self, spec: WorkerSpec) -> None:
+        """A replacement joins on the same mesh (model state is already
+        replicated).  ``spec`` resources don't change real hardware; they
+        seed the newcomer's dilation when heterogeneity is being emulated
+        (see :class:`repro.api.backend.MeshBackend`)."""
+        self.membership_log.append((self.step_idx, "add", self.k))
+        total = (self.controller.global_batch if self.controller is not None
+                 else sum(self.batches))
+        self.k += 1
+        self._ewma.append(None)
+        self.worker_buckets.append(set())
+        self.dilation.append(self._dilation_for_spec(spec)
+                             if self._dilation_for_spec is not None else 1.0)
+        if self.controller is not None:
+            self.batches = self.controller.add_worker(total / self.k)
+        else:
+            self.batches = self._measured_replan(total)
+
+
+def dilation_from_specs(specs: Sequence[WorkerSpec],
+                        amdahl_p: float = 0.95):
+    """Time-dilation factors emulating a ``ClusterSpec``'s declared
+    heterogeneity on homogeneous hardware: the fastest declared worker runs
+    undilated, a worker with half its effective speed takes 2x the measured
+    time.  Effective speed = Amdahl(cores) x flops_ratio, the same model the
+    simulator uses (DESIGN.md §2).
+
+    Returns ``(dilations, dilation_for_spec)`` — the per-worker factors plus
+    a function dilating any LATER-joining :class:`WorkerSpec` against the
+    same reference (the initial fleet's fastest worker), so elastic joins
+    stay on a consistent scale.
+    """
+    from repro.het.simulator import amdahl_speedup
+
+    def eff(s: WorkerSpec) -> float:
+        return amdahl_speedup(s.cores, amdahl_p) * s.flops_ratio
+
+    top = max(eff(s) for s in specs)
+    return [top / eff(s) for s in specs], lambda s: top / eff(s)

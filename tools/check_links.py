@@ -1,0 +1,66 @@
+"""Fail on broken intra-repo markdown links (CI lint step).
+
+Scans every tracked ``*.md`` file for ``[text](target)`` links and verifies
+that relative targets resolve to an existing file or directory (anchors are
+stripped; external ``http(s)://`` / ``mailto:`` targets and pure in-page
+``#anchor`` links are skipped).  Exit code 1 lists every broken link.
+
+    python tools/check_links.py [root]
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target) — target without spaces/closing paren; images share the form
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "ftp://")
+_SKIP_DIRS = {".git", ".github", "__pycache__", ".pytest_cache", "node_modules"}
+
+
+def md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in _SKIP_DIRS]
+        for name in filenames:
+            if name.endswith(".md"):
+                yield os.path.join(dirpath, name)
+
+
+def broken_links(path: str, root: str) -> list[tuple[int, str]]:
+    bad = []
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            for target in _LINK.findall(line):
+                if target.startswith(_SKIP_PREFIXES) or target.startswith("#"):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                base = root if rel.startswith("/") else os.path.dirname(path)
+                resolved = os.path.normpath(
+                    os.path.join(base, rel.lstrip("/")))
+                if not os.path.exists(resolved):
+                    bad.append((lineno, target))
+    return bad
+
+
+def main() -> int:
+    root = os.path.abspath(sys.argv[1] if len(sys.argv) > 1 else
+                           os.path.join(os.path.dirname(__file__), ".."))
+    failures = 0
+    checked = 0
+    for path in sorted(md_files(root)):
+        checked += 1
+        for lineno, target in broken_links(path, root):
+            failures += 1
+            print(f"{os.path.relpath(path, root)}:{lineno}: "
+                  f"broken link -> {target}")
+    print(f"checked {checked} markdown files: "
+          f"{failures} broken intra-repo link(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
