@@ -1,14 +1,26 @@
-"""One Experiment, two execution backends (DESIGN.md §11).
+"""One Experiment, two execution backends, both sync modes (DESIGN.md
+§11-§12).
 
 The SAME declarative Experiment runs first under the calibrated cluster
-simulator and then as ragged SPMD on a real JAX mesh: per-worker batches
-are padded to a geometric bucket ladder (bounded recompiles), padded rows
-are masked out of the gradient, and the dynamic-batching controller closes
-its loop on MEASURED, device-synced step times — with the cluster spec's
-declared heterogeneity emulated through time dilation so both loops chase
-the same imbalance.
+simulator and then as ragged SPMD on a real JAX mesh: workers own disjoint
+data-axis slices dispatched concurrently (max-of-workers BSP rounds, when
+the axis is wide enough), per-worker batches are padded to a geometric
+bucket ladder (bounded recompiles), padded rows are masked out of the
+gradient, and the dynamic-batching controller closes its loop on MEASURED,
+device-synced step times — with the cluster spec's declared heterogeneity
+emulated through time dilation so both loops chase the same imbalance.
+The last leg switches the mesh backend to ASP: the same event engine as
+the simulator, fed measured per-worker completion times.
 
     PYTHONPATH=src python examples/mesh_train.py
+
+CLI equivalents (the launcher accepts the same knobs):
+
+    PYTHONPATH=src python -m repro.launch.train --backend mesh --steps 30
+    PYTHONPATH=src python -m repro.launch.train --backend mesh --sync asp \\
+        --steps 30                      # event-driven ASP on the mesh
+    PYTHONPATH=src python -m repro.launch.train --backend mesh \\
+        --ckpt /tmp/run.ckpt            # resumable via Session.restore
 """
 
 import os
@@ -21,7 +33,7 @@ from repro.api import (ClusterSpec, Experiment, MeshBackend, TrainConfig,
 from repro.optim import sgd
 
 
-def run_on(backend, label):
+def run_on(backend, label, sync="bsp"):
     experiment = Experiment(
         workload=paper_workload("linreg"),
         # 39 cores split (4, 11, 24) — heterogeneity level 6.  On the mesh
@@ -30,7 +42,7 @@ def run_on(backend, label):
                                    backend=backend),
         optimizer=sgd(0.05),
         config=TrainConfig(b0=32, microbatch=8, batching="dynamic",
-                           max_steps=60),
+                           sync=sync, max_steps=60),
     )
     session = experiment.session()
     out = session.run()
@@ -43,6 +55,13 @@ def run_on(backend, label):
     if hasattr(trainer, "worker_buckets"):
         print(f"  bucket rungs per worker  : "
               f"{[sorted(b) for b in trainer.worker_buckets]}")
+    if getattr(trainer, "slice_plan", None) is not None:
+        print(f"  data-axis slices         : "
+              f"{list(trainer.slice_plan.slices)} (concurrent dispatch)")
+    if sync == "asp":
+        stale = [int(r.straggler_waste) for r in out["history"]]
+        print(f"  update staleness         : mean "
+              f"{sum(stale) / len(stale):.2f}, max {max(stale)}")
     print(f"  clock                    : {out['sim_time']:.3f}s "
           f"({'simulated' if backend is None else 'measured wall'})")
     return out
@@ -53,6 +72,10 @@ def main():
     out = run_on(MeshBackend(dilation="from-spec"),
                  "mesh backend — measured, ragged SPMD")
     assert out["steps"] == 60, "mesh run did not complete"
+    out = run_on(MeshBackend(dilation="from-spec"),
+                 "mesh backend, ASP — measured event-driven sync",
+                 sync="asp")
+    assert out["steps"] == 60, "mesh ASP run did not complete"
 
 
 if __name__ == "__main__":

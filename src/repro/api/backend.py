@@ -8,9 +8,12 @@ Two implementations (DESIGN.md §11):
     heterogeneity *simulator* (``ClusterSim``).  Bit-for-bit the behavior
     Experiments had before backends existed — seeded histories are golden.
   * :class:`MeshBackend` — ragged SPMD on a real ``jax`` device mesh:
-    per-worker batches padded to a geometric bucket ladder, masked
-    ``weighted_psum`` aggregation, and the controller fed **measured**
-    (device-synced, EWMA-filtered) step times instead of simulated ones.
+    workers own disjoint data-axis slices and dispatch concurrently
+    (max-of-workers BSP rounds, DESIGN.md §12), per-worker batches padded
+    to a geometric bucket ladder, masked ``weighted_psum`` aggregation,
+    and the controller fed **measured** (device-synced, EWMA-filtered)
+    step times instead of simulated ones.  BSP, ASP, elastic membership
+    and ``Session.save/restore`` all work on both backends.
 
 Select per experiment via ``ClusterSpec(backend=...)``:
 
@@ -67,7 +70,7 @@ class SimBackend:
 
 @dataclasses.dataclass
 class MeshBackend:
-    """Ragged SPMD execution on a real JAX mesh (DESIGN.md §11).
+    """Ragged SPMD execution on a real JAX mesh (DESIGN.md §11-§12).
 
     ``mesh``: any mesh with a data axis (``launch.mesh.make_debug_mesh`` /
     ``make_production_mesh``); ``None`` builds a 1-D data mesh over all
@@ -84,14 +87,22 @@ class MeshBackend:
 
     ``growth`` is the bucket-ladder ratio (recompiles per worker are
     bounded by ``ceil(log_growth(b_max/b_min)) + 1``); ``time_alpha`` the
-    measurement EWMA.  Checkpointing and ASP are not supported yet
-    (ROADMAP open items).
+    measurement EWMA.  ``concurrent`` (default on) maps the workers onto
+    disjoint data-axis slices dispatched in parallel
+    (`core.placement.SlicePlan`, DESIGN.md §12) so a BSP round costs
+    max-of-workers wall time; it degrades automatically to time-
+    multiplexing the full axis when the data axis has fewer devices than
+    workers, and ``concurrent=False`` forces that sequential mode (the
+    `benchmarks/backend_bench.py` timing A/B uses this).  All sync modes
+    (``bsp``/``asp``), elastic membership, and ``Session.save/restore``
+    are supported.
     """
 
     mesh: Optional[object] = None
     dilation: Union[None, str, Sequence[float]] = None
     growth: float = 1.25
     time_alpha: float = 0.5
+    concurrent: bool = True
     name: str = dataclasses.field(default="mesh", init=False)
 
     def build_trainer(self, *, workload, cluster, optimizer, cfg):
@@ -122,4 +133,5 @@ class MeshBackend:
             time_alpha=self.time_alpha,
             worker_dilation=worker_dilation,
             dilation_for_spec=dilation_for_spec,
+            concurrent=self.concurrent,
         )

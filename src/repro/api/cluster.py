@@ -92,13 +92,17 @@ class ClusterSpec:
     from the API-level :class:`~repro.api.workload.Workload`, which defines
     the real SGD computation.
 
-    ``backend`` selects the execution substrate (DESIGN.md §11): ``None``
-    means the default :class:`~repro.api.backend.SimBackend` (iteration
-    times from the calibrated simulator);
+    ``backend`` selects the execution substrate (DESIGN.md §11-§12):
+    ``None`` means the default :class:`~repro.api.backend.SimBackend`
+    (iteration times from the calibrated simulator);
     :class:`~repro.api.backend.MeshBackend` runs the same experiment on a
-    real JAX device mesh with measured step times.  The worker list always
-    defines the logical fleet (count + declared sizes); on a mesh backend
-    the declared sizes only matter when heterogeneity is being emulated
+    real JAX device mesh — workers on disjoint data-axis slices dispatched
+    concurrently — with measured step times.  Every capability of this
+    spec (the membership ``schedule``, ``sync="asp"`` configs,
+    ``Session.save/restore``) works on either backend (the README's
+    backend matrix).  The worker list always defines the logical fleet
+    (count + declared sizes); on a mesh backend the declared sizes only
+    matter when heterogeneity is being emulated
     (``MeshBackend(dilation="from-spec")``).
     """
 

@@ -270,60 +270,83 @@ class Session:
     # ---------------------------------------------------------- checkpoint
 
     def _require_checkpointable(self):
-        """Checkpointing needs the sim backend's state surface (engine
-        queue + simulator jitter RNG); mesh checkpoint/restore is a ROADMAP
-        open item (DESIGN.md §11)."""
+        """Checkpointing needs a trainer with a known state surface: the sim
+        backend's (engine queue + simulator jitter RNG) or the mesh
+        backend's (``exec_state_dict`` — EWMA/rate model, bucket ladders,
+        slice assignment; DESIGN.md §12)."""
         t = self.trainer
-        if not (hasattr(t, "engine") and hasattr(t.sim, "rng")):
-            raise NotImplementedError(
-                "session checkpointing is implemented for SimBackend runs "
-                "only; MeshBackend checkpoint/restore is a ROADMAP open item")
-        return t
+        kind = getattr(t, "backend_kind", None)
+        if kind == "sim" and hasattr(t, "engine") and hasattr(t.sim, "rng"):
+            return t
+        if kind == "mesh" and hasattr(t, "exec_state_dict"):
+            return t
+        raise NotImplementedError(
+            "session checkpointing is implemented for SimBackend and "
+            "MeshBackend trainers (Session.save/restore, DESIGN.md §12); "
+            f"this trainer ({type(t).__name__!r}) exposes neither state "
+            "surface")
 
     def save(self, path: str, extra_meta: Optional[dict] = None) -> None:
         """Checkpoint the full session: model + optimizer + controller +
-        simulator clock/RNG + engine counters + data-source cursors.
+        backend execution state + engine counters + data-source cursors.
 
         Enough for :meth:`restore` to continue a BSP run bit-for-bit.  (ASP
         in-flight events and their stale parameter payloads are not
         persisted — an ASP resume redispatches all workers from the current
         params, like a real cluster restart would.)
 
-        Implemented for the sim backend; a MeshBackend session has no
-        simulator RNG/event-queue state to capture (DESIGN.md §11) and
-        raises until mesh checkpointing lands (ROADMAP open item).
+        The backend-specific payload is tagged with the backend kind: the
+        sim backend persists its simulator clock/jitter-RNG, the mesh
+        backend its measurement/EWMA state, rate model, bucket-ladder
+        caches and slice assignment (DESIGN.md §12) — so a mesh run resumes
+        with bit-identical controller-facing state.
         """
         t = self._require_checkpointable()
-        meta = {
-            "session": {
-                "step": t.step_idx,
-                "batches": list(t.batches),
-                "smoothed_loss": self.smoothed_loss,
-                "controller": (t.controller.state_dict()
-                               if t.controller is not None else None),
-                "sim": {
-                    "time": t.sim.time,
-                    "iteration": t.sim.iteration,
-                    "rng": t.sim.rng.bit_generator.state,
-                },
-                "engine": {
-                    "version": t.engine.version,
-                    "read_version": list(t.engine.read_version),
-                },
-                "workload": (self.workload.state_dict()
-                             if self.workload is not None
-                             and self.workload.state_dict else None),
+        session_meta = {
+            "backend": t.backend_kind,
+            "step": t.step_idx,
+            "batches": list(t.batches),
+            "smoothed_loss": self.smoothed_loss,
+            "controller": (t.controller.state_dict()
+                           if t.controller is not None else None),
+            "engine": {
+                "version": t.engine.version,
+                "read_version": list(t.engine.read_version),
             },
-            **(extra_meta or {}),
+            "workload": (self.workload.state_dict()
+                         if self.workload is not None
+                         and self.workload.state_dict else None),
         }
+        if t.backend_kind == "sim":
+            session_meta["sim"] = {
+                "time": t.sim.time,
+                "iteration": t.sim.iteration,
+                "rng": t.sim.rng.bit_generator.state,
+            }
+        else:
+            session_meta["mesh"] = t.exec_state_dict()
+        meta = {"session": session_meta, **(extra_meta or {})}
         save_checkpoint(path, {"params": t.params, "opt_state": t.opt_state},
                         meta)
 
     def restore(self, path: str) -> "Session":
-        """Load a :meth:`save` checkpoint into this (freshly built) session."""
+        """Load a :meth:`save` checkpoint into this (freshly built) session.
+
+        Validates that the checkpoint was written by the same backend kind
+        this session runs — restoring a sim checkpoint into a mesh session
+        (or vice versa) would silently mismatch clock/measurement state, so
+        it is a hard error instead.
+        """
         t = self._require_checkpointable()
         tree, meta = load_checkpoint(path)
         st = meta["session"]
+        ckpt_kind = st.get("backend", "sim")
+        if ckpt_kind != t.backend_kind:
+            raise ValueError(
+                f"checkpoint was written by the {ckpt_kind!r} backend but "
+                f"this session runs {t.backend_kind!r} — rebuild the "
+                f"Experiment with the matching ClusterSpec(backend=...) or "
+                f"point at a {t.backend_kind!r} checkpoint")
         if len(st["batches"]) != t.k:
             raise ValueError(
                 f"checkpoint has {len(st['batches'])} workers, session has "
@@ -339,9 +362,12 @@ class Session:
         self.smoothed_loss = st["smoothed_loss"]
         if st["controller"] is not None and t.controller is not None:
             t.controller = controller_from_state_dict(st["controller"])
-        t.sim.time = float(st["sim"]["time"])
-        t.sim.iteration = int(st["sim"]["iteration"])
-        t.sim.rng.bit_generator.state = st["sim"]["rng"]
+        if t.backend_kind == "sim":
+            t.sim.time = float(st["sim"]["time"])
+            t.sim.iteration = int(st["sim"]["iteration"])
+            t.sim.rng.bit_generator.state = st["sim"]["rng"]
+        else:
+            t.load_exec_state_dict(st["mesh"])
         t.engine.version = int(st["engine"]["version"])
         t.engine.read_version = [int(v) for v in st["engine"]["read_version"]]
         if st["workload"] is not None and self.workload is not None \

@@ -34,6 +34,7 @@ from repro.core.grad import (
     combine_weighted,
     weighted_psum,
 )
+from repro.core.placement import SlicePlan, plan_slices
 
 __all__ = [
     "BatchController",
@@ -46,6 +47,7 @@ __all__ = [
     "PIController",
     "PIDController",
     "ProportionalController",
+    "SlicePlan",
     "WorkerState",
     "accumulate_microbatch_grads",
     "bucket_ladder",
@@ -60,6 +62,7 @@ __all__ = [
     "largest_remainder_round",
     "plan_cluster",
     "plan_microbatches",
+    "plan_slices",
     "static_allocation",
     "weighted_psum",
 ]

@@ -1,0 +1,160 @@
+"""Worker → device-slice placement along the mesh data axis (DESIGN.md §12).
+
+The concurrent mesh execution path (`repro.train.mesh.MeshTrainer`) gives
+each of the K logical workers a *disjoint, contiguous* run of devices along
+the (flattened) mesh data axis, so the workers' bucketed gradient calls
+dispatch concurrently and a BSP round costs max-of-workers wall time
+instead of sum-of-workers.  This module owns the assignment math:
+
+  * a :class:`SlicePlan` is data — ``(start, length)`` per worker over a
+    data axis of ``extent`` devices, allocated in whole multiples of
+    ``quantum`` devices (the unit a slice may not split: 1 for a flat data
+    axis; a pod's data extent when slices must not straddle pods);
+  * the plan is always **disjoint** (no device serves two workers),
+    **exhaustive** (every data-axis device belongs to exactly one worker),
+    and **quantum-aligned** (every start/length is a multiple of
+    ``quantum``) — invariants enforced at construction, so a violated plan
+    cannot exist;
+  * membership changes *rebalance*: :meth:`SlicePlan.remove` hands the
+    departed worker's devices to the survivors proportionally to their
+    current shares, :meth:`SlicePlan.add` carves an average-sized slice for
+    the newcomer — both through the same largest-remainder apportionment
+    (`core.allocation`) the batch planner uses, so device shares round the
+    same way batch shares do.
+
+A worker's slice length is also its *bucket quantum*: padded batches must
+shard evenly over the slice, so `MeshTrainer` anchors worker k's bucket
+ladder at ``lengths[k]`` (see DESIGN.md §12 for why the ladder bound is
+preserved per worker).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core.allocation import largest_remainder_round
+
+
+@dataclasses.dataclass(frozen=True)
+class SlicePlan:
+    """Disjoint contiguous device slices tiling [0, extent) on the data axis.
+
+    ``slices[k] = (start, length)`` in device units; worker k owns data-axis
+    indices ``[start, start + length)`` (every model-axis device column at
+    those indices).  Construct via :func:`plan_slices` or the
+    :meth:`remove` / :meth:`add` rebalancers — the constructor validates the
+    disjoint/exhaustive/aligned invariants and raises on any violation.
+    """
+
+    extent: int                              # data-axis devices
+    quantum: int                             # allocation unit (devices)
+    slices: tuple[tuple[int, int], ...]      # per-worker (start, length)
+
+    def __post_init__(self) -> None:
+        if self.extent < 1:
+            raise ValueError(f"extent must be >= 1, got {self.extent}")
+        if self.quantum < 1:
+            raise ValueError(f"quantum must be >= 1, got {self.quantum}")
+        if self.extent % self.quantum:
+            raise ValueError(
+                f"extent {self.extent} is not a multiple of quantum "
+                f"{self.quantum}")
+        if not self.slices:
+            raise ValueError("a plan needs at least one worker slice")
+        cursor = 0
+        for k, (start, length) in enumerate(self.slices):
+            if start != cursor:
+                raise ValueError(
+                    f"slice {k} starts at {start}, expected {cursor} — "
+                    f"slices must tile the axis contiguously (disjoint + "
+                    f"exhaustive)")
+            if length < self.quantum or length % self.quantum:
+                raise ValueError(
+                    f"slice {k} length {length} is not a positive multiple "
+                    f"of quantum {self.quantum}")
+            cursor += length
+        if cursor != self.extent:
+            raise ValueError(
+                f"slices cover {cursor} devices, data axis has {self.extent}")
+
+    # ------------------------------------------------------------- queries
+
+    @property
+    def k(self) -> int:
+        return len(self.slices)
+
+    @property
+    def lengths(self) -> list[int]:
+        return [length for _, length in self.slices]
+
+    def devices_of(self, worker: int) -> range:
+        start, length = self.slices[worker]
+        return range(start, start + length)
+
+    # --------------------------------------------------------- rebalancing
+
+    def remove(self, worker: int) -> "SlicePlan":
+        """Preemption: the departed worker's devices are reabsorbed by the
+        survivors proportionally to their current shares."""
+        if not (0 <= worker < self.k):
+            raise ValueError(f"no worker {worker} in a {self.k}-slice plan")
+        if self.k <= 1:
+            raise ValueError("cannot remove the last worker's slice")
+        survivors = [length for j, (_, length) in enumerate(self.slices)
+                     if j != worker]
+        return plan_slices(self.extent, self.k - 1, weights=survivors,
+                           quantum=self.quantum)
+
+    def add(self, weight: Optional[float] = None) -> "SlicePlan":
+        """A joiner (appended last) gets an average-sized share unless a
+        ``weight`` on the existing workers' length scale says otherwise."""
+        lengths = self.lengths
+        newcomer = float(sum(lengths)) / len(lengths) if weight is None \
+            else float(weight)
+        if newcomer <= 0:
+            raise ValueError(f"joiner weight must be positive, got {weight}")
+        return plan_slices(self.extent, self.k + 1,
+                           weights=[*lengths, newcomer],
+                           quantum=self.quantum)
+
+
+def plan_slices(extent: int, k: int,
+                weights: Optional[Sequence[float]] = None, *,
+                quantum: int = 1) -> SlicePlan:
+    """Apportion ``extent`` data-axis devices over ``k`` workers.
+
+    ``weights`` bias the split (e.g. survivors' previous lengths during a
+    rebalance); ``None`` means equal shares.  Every worker gets at least one
+    ``quantum`` of devices, so ``k`` may not exceed ``extent // quantum`` —
+    the caller (`MeshTrainer`) falls back to time-multiplexing the full
+    axis when it does.
+    """
+    if k < 1:
+        raise ValueError(f"need at least one worker, got {k}")
+    if quantum < 1:
+        raise ValueError(f"quantum must be >= 1, got {quantum}")
+    if extent < 1 or extent % quantum:
+        raise ValueError(
+            f"extent {extent} must be a positive multiple of quantum "
+            f"{quantum}")
+    units = extent // quantum
+    if k > units:
+        raise ValueError(
+            f"{k} workers need {k} x {quantum} devices, data axis has "
+            f"{extent} — not enough for disjoint slices")
+    if weights is None:
+        weights = [1.0] * k
+    if len(weights) != k:
+        raise ValueError(f"{len(weights)} weights for {k} workers")
+    if any(w <= 0 for w in weights):
+        raise ValueError(f"weights must be positive, got {list(weights)}")
+    total = float(sum(weights))
+    unit_shares = largest_remainder_round(
+        [units * w / total for w in weights], units, lo=1)
+    slices, cursor = [], 0
+    for u in unit_shares:
+        length = u * quantum
+        slices.append((cursor, length))
+        cursor += length
+    return SlicePlan(extent=extent, quantum=quantum, slices=tuple(slices))

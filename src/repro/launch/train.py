@@ -43,11 +43,12 @@ def main(argv=None) -> dict:
                     choices=["uniform", "static", "dynamic"])
     ap.add_argument("--sync", default="bsp", choices=["bsp", "asp"])
     ap.add_argument("--backend", default="sim", choices=["sim", "mesh"],
-                    help="execution backend (DESIGN.md §11): 'sim' = "
+                    help="execution backend (DESIGN.md §11-§12): 'sim' = "
                          "simulated clock; 'mesh' = ragged SPMD on the real "
-                         "JAX mesh, controller fed measured step times "
-                         "(worker heterogeneity emulated from the cluster "
-                         "spec)")
+                         "JAX mesh — workers on disjoint data-axis slices "
+                         "dispatched concurrently, controller fed measured "
+                         "step times (worker heterogeneity emulated from "
+                         "the cluster spec); supports --sync asp and --ckpt")
     ap.add_argument("--workers", type=int, default=3)
     ap.add_argument("--total-cores", type=int, default=39)
     ap.add_argument("--hlevel", type=float, default=6.0)
@@ -76,9 +77,6 @@ def main(argv=None) -> dict:
 
     backend = (MeshBackend(dilation="from-spec") if args.backend == "mesh"
                else None)
-    if args.backend == "mesh" and args.ckpt:
-        ap.error("--ckpt requires the sim backend (mesh checkpointing is a "
-                 "ROADMAP open item)")
     if args.backend == "mesh" and args.interference:
         ap.error("--interference requires the sim backend: availability "
                  "traces are a simulator concept, and MeshTrainer does not "

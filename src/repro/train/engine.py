@@ -16,9 +16,13 @@ every synchronization mode:
     state, which is what made the seed's ``_asp_state`` go stale after a
     mid-run membership change.
 
-The engine never touches model state: it advances the simulated clock and
-tells the caller *which* worker acts *when*.  ``ClusterSim.asp_run``
-delegates here, so the event loop exists exactly once in the codebase.
+The engine never touches model state: it advances the clock and tells the
+caller *which* worker acts *when*.  ``ClusterSim.asp_run`` delegates here,
+so the event loop exists exactly once in the codebase — and because the
+``sim`` argument is duck-typed, the mesh execution backend drives the SAME
+queue with measured per-worker completion times instead of modelled ones
+(``repro.train.mesh._MeasuredTimeModel``, DESIGN.md §12): the engine is the
+single owner of BSP/ASP/elastic ordering on both backends.
 """
 
 from __future__ import annotations

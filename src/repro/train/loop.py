@@ -123,6 +123,8 @@ class HeterogeneousTrainer:
     content changes.
     """
 
+    backend_kind = "sim"   # checkpoint payload flavor (api.session.Session)
+
     def __init__(
         self,
         *,

@@ -1,4 +1,4 @@
-"""Ragged SPMD execution on a real JAX device mesh (DESIGN.md §11).
+"""Ragged SPMD execution on a real JAX device mesh (DESIGN.md §11-§12).
 
 `HeterogeneousTrainer` closes the dynamic-batching loop against the cluster
 *simulator*: real SGD, modelled wall-clock.  This module closes it against
@@ -6,31 +6,49 @@ real hardware: K logical workers run on an actual ``jax`` mesh with *ragged*
 per-worker batch sizes, and the controller observes **measured** step times
 (device-synced wall clock, EWMA-filtered) instead of simulated ones.
 
-Execution model per BSP round:
+Execution model (DESIGN.md §12):
 
+  * each worker owns a **disjoint, contiguous slice** of the mesh data axis
+    (`core.placement.SlicePlan` — disjoint / exhaustive / quantum-aligned
+    by construction), so the K bucketed gradient calls dispatch
+    **concurrently**: JAX async dispatch is left unblocked while all K
+    calls are in flight, and per-slice completion timestamps are collected
+    by awaiter threads blocking on each slice's outputs — a BSP round costs
+    max-of-workers wall time, not sum-of-workers;
   * worker k's mini-batch b_k is padded up to a *bucketed* shape
-    ``bucket_up(b_k)`` (geometric ladder, ``core.batching`` — bounds XLA
-    recompiles to O(log(b_max/b_min)) while the controller drifts b_k
-    continuously); slots past b_k carry zero weight via the same validity
-    masks the simulator path uses for remainder microbatches;
-  * the padded batch's rows are sharded across the mesh **data axis**
-    (``shard_map``); each device computes the masked gradient sum of its
-    rows and :func:`repro.core.grad.weighted_psum` divides the cross-device
-    gradient sum by the mask-weight sum ONCE — so padding rows contribute
-    exactly zero and the SUM-gradient contract (DESIGN.md §4) is preserved
-    bit-for-bit relative to an unpadded computation;
-  * per-worker gradients are combined with the paper's lambda weights
+    ``bucket_up(b_k)`` (geometric ladder, ``core.batching``, anchored at
+    the worker's slice extent so every padded batch shards evenly); slots
+    past b_k carry zero weight via the same validity masks the simulator
+    path uses for remainder microbatches;
+  * each slice computes the masked gradient sum of its rows and
+    :func:`repro.core.grad.weighted_psum` divides the per-slice gradient
+    sum by the mask-weight sum ONCE — padding rows contribute exactly zero
+    and the SUM-gradient contract (DESIGN.md §4) is preserved bit-for-bit
+    relative to an unpadded computation; per-worker gradients are then
+    combined with the paper's lambda weights
     (:func:`repro.core.grad.combine_weighted`), identical to the sim path;
-  * each worker's call is timed on the host around a device sync; samples
-    that triggered a fresh XLA trace are re-executed once so compile time
+  * each worker's dispatch→completion interval is measured; dispatches that
+    triggered a fresh XLA trace are re-executed once solo so compile time
     never pollutes the control signal; an EWMA filter (``time_alpha``)
     smooths scheduler jitter before the controller's own filtering.
 
-Workers time-multiplex the mesh (dispatched sequentially, each batch
-striped across the full data axis).  On a multi-host mesh the natural
-extension is concurrent dispatch onto disjoint data-axis slices — tracked
-as a ROADMAP open item; the controller/aggregation contracts here are
-unchanged by that move.
+The measured completions feed a :class:`_MeasuredTimeModel` that duck-types
+the ``ClusterSim`` surface :class:`repro.train.engine.EventEngine` drives,
+so **BSP, ASP and elastic schedules** all run through the same event queue
+as the sim backend — ASP pops the predicted-earliest completion (per-worker
+EWMA rates from real measurements), executes that worker's gradient on the
+params it last read, and updates the rate model with the new measurement.
+
+When the data axis has fewer devices than workers (e.g. the single-device
+test container) the trainer falls back to time-multiplexing all workers
+over the full axis — the PR-3 behavior; everything but the concurrency
+(ASP, checkpointing, membership) works identically there.
+
+Checkpointing: :meth:`exec_state_dict` / :meth:`load_exec_state_dict`
+capture the measurement/EWMA state, the rate model + clock, the bucket
+ladders visited, and the slice assignment, so
+:meth:`repro.api.session.Session.save` resumes mesh runs the way it
+resumes sim runs (payload layout in DESIGN.md §12).
 
 Optional ``worker_dilation`` multiplies worker k's *measured* time by a
 constant factor — emulating a heterogeneous fleet (OmniLearn-style slow
@@ -40,47 +58,167 @@ end-to-end.  The computation itself is always real.
 
 from __future__ import annotations
 
+import dataclasses
 import math
 import time as _time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import (
+    SlicePlan,
     bucket_up,
     combine_weighted,
     largest_remainder_round,
     make_controller,
+    plan_slices,
     static_allocation,
 )
 from repro.core.grad import weighted_psum
 from repro.het.simulator import WorkerSpec
 from repro.launch.mesh import data_axes
 from repro.optim.optimizers import Optimizer
+from repro.train.engine import EventEngine
 from repro.train.loop import StepRecord, TrainConfig
 
 
-class _MeshClock:
-    """Duck-typed stand-in for ``ClusterSim``'s clock: ``Session`` and the
-    metrics only need ``.time`` (here: accumulated measured barrier time)."""
+class _MeasuredTimeModel:
+    """Measured-time stand-in for ``ClusterSim``: the event engine's clock.
 
-    def __init__(self) -> None:
+    Duck-types the surface :class:`EventEngine` needs (``workers``,
+    ``iteration_time``, ``bsp_step``, mutable ``time``) but is backed by
+    EWMA per-example rates learned from real, device-synced completion
+    measurements instead of a calibrated model — this is what lets the
+    backend-agnostic engine drive ASP/elastic schedules on the mesh
+    (DESIGN.md §12).
+    """
+
+    DEFAULT_RATE = 1e-3   # sec/example before any worker has been measured
+
+    def __init__(self, num_workers: int, alpha: float) -> None:
         self.time = 0.0
         self.iteration = 0
+        self.alpha = alpha
+        self.rate: list[Optional[float]] = [None] * num_workers
+        self._pending_round: Optional[list[float]] = None
+
+    @property
+    def workers(self) -> list:                 # engine reads len(sim.workers)
+        return self.rate
+
+    # -------------------------------------------------------- observations
+
+    def observe(self, k: int, batch: int, seconds: float) -> None:
+        """Fold one measured (dilated) completion into worker k's rate."""
+        r = seconds / max(batch, 1)
+        prev = self.rate[k]
+        self.rate[k] = r if prev is None else (
+            self.alpha * r + (1 - self.alpha) * prev)
+
+    def iteration_time(self, k: int, batch: int,
+                       at_time: Optional[float] = None) -> float:
+        """Predicted step time from the EWMA rate (engine schedule source).
+
+        Unmeasured workers (fresh joiners, cold start) borrow the mean
+        measured rate so the event queue stays well-ordered until their
+        first real completion lands.
+        """
+        r = self.rate[k]
+        if r is None:
+            known = [x for x in self.rate if x is not None]
+            r = sum(known) / len(known) if known else self.DEFAULT_RATE
+        return r * batch
+
+    # ----------------------------------------------------------- BSP round
+
+    def push_round(self, worker_times: Sequence[float]) -> None:
+        """Stage one round's measured per-worker times for ``bsp_step``."""
+        self._pending_round = list(worker_times)
+
+    def bsp_step(self, batches: Sequence[int]) -> dict:
+        """Engine-facing barrier: consumes the staged MEASURED times (the
+        sim backend models these; here they were clocked on device)."""
+        times = self._pending_round
+        if times is None or len(times) != len(batches):
+            raise RuntimeError(
+                "bsp_step needs a staged measured round (push_round first)")
+        self._pending_round = None
+        t_iter = max(times)
+        self.time += t_iter
+        self.iteration += 1
+        return {
+            "worker_times": times,
+            "iteration_time": t_iter,
+            "straggler_waste": sum(t_iter - t for t in times) / max(
+                len(times) * t_iter, 1e-9),
+        }
+
+    # ---------------------------------------------------------- membership
+
+    def remove_worker(self, k: int) -> None:
+        del self.rate[k]
+
+    def add_worker(self) -> None:
+        self.rate.append(None)
+
+
+@dataclasses.dataclass
+class _WorkerExec:
+    """One worker's execution substrate: its (sub-)mesh + compiled calls."""
+
+    mesh: Mesh
+    daxes: tuple                   # batch-carrying axes of ``mesh``
+    quantum: int                   # bucket quantum = slice data extent
+    bucket_base: int               # ladder anchor (microbatch, quantized)
+    gradfn: Callable               # jitted shard_map over ``mesh``
+    slice: Optional[tuple[int, int]]   # (start, length) on the data axis;
+                                       # None = full-axis fallback
+    data_sharding: NamedSharding
+    params_sharding: NamedSharding
+
+
+@dataclasses.dataclass
+class _Dispatch:
+    """An in-flight (possibly still executing) worker gradient call."""
+
+    worker: int
+    out: tuple                     # (g_mean, loss_sum, w_sum) device arrays
+    t0: float                      # dispatch timestamp (perf_counter)
+    fresh_trace: bool              # this call paid for tracing+compilation
+    host_data: object              # pre-transfer batch (for the solo rerun)
+    mask_host: np.ndarray
+    bucket: int
+
+
+def _ready_timestamp(out) -> float:
+    """Block until ``out`` is device-complete; return the completion time.
+
+    Runs on an awaiter thread per in-flight worker so each slice's
+    completion is stamped when *that slice* finishes, independent of the
+    order the main thread would have polled them in.
+    """
+    jax.block_until_ready(out)
+    return _time.perf_counter()
 
 
 class MeshTrainer:
-    """Drives the dynamic-batching loop on a real JAX mesh (BSP only).
+    """Drives the dynamic-batching loop on a real JAX mesh (BSP + ASP).
 
     Presents the same surface as :class:`HeterogeneousTrainer` to
-    :class:`repro.api.session.Session` (``bsp_step`` / ``history`` /
-    ``batches`` / ``controller`` / membership events), but executes on
-    ``mesh`` and feeds the controller measured times.  Construct via
-    :class:`repro.api.backend.MeshBackend`, not directly.
+    :class:`repro.api.session.Session` (``bsp_step`` / ``asp_step`` /
+    ``history`` / ``batches`` / ``controller`` / ``engine`` / membership
+    events / checkpoint state), but executes on ``mesh`` — concurrently
+    over disjoint data-axis slices when the axis is wide enough
+    (DESIGN.md §12) — and feeds the controller measured times.  Construct
+    via :class:`repro.api.backend.MeshBackend`, not directly.
     """
+
+    backend_kind = "mesh"
 
     def __init__(
         self,
@@ -96,11 +234,8 @@ class MeshTrainer:
         time_alpha: float = 0.5,
         worker_dilation: Optional[Sequence[float]] = None,
         dilation_for_spec: Optional[Callable[[WorkerSpec], float]] = None,
+        concurrent: bool = True,
     ):
-        if cfg.sync != "bsp":
-            raise ValueError(
-                "MeshBackend supports sync='bsp' only (ASP needs per-worker "
-                "event timing the mesh runtime does not expose yet)")
         if num_workers < 1:
             raise ValueError("need at least one worker")
         self.cfg = cfg
@@ -108,10 +243,10 @@ class MeshTrainer:
         self._daxes = data_axes(mesh)
         if not self._daxes:
             raise ValueError(f"mesh {mesh.axis_names} has no data axis")
-        # padded batches must shard evenly over the data axis; the ladder
-        # base anchors at the sim path's microbatch so both backends pad in
-        # comparable quanta
-        self.quantum = int(math.prod(mesh.shape[a] for a in self._daxes))
+        # full-axis ladder anchors (the fallback path's quanta); slices get
+        # their own per-worker quanta from the placement plan
+        self.data_extent = int(math.prod(mesh.shape[a] for a in self._daxes))
+        self.quantum = self.data_extent
         self.bucket_base = self.quantum * -(-cfg.microbatch // self.quantum)
         self.growth = growth
         self.time_alpha = time_alpha
@@ -125,31 +260,157 @@ class MeshTrainer:
         self._dilation_for_spec = dilation_for_spec
         self.next_batch = next_batch
         self.optimizer = optimizer
+        self._loss_and_grad = loss_and_grad
         key = jax.random.PRNGKey(cfg.seed)
         self.params = init_params(key)
         self.opt_state = optimizer.init(self.params)
         self.step_idx = 0
         self.history: list[StepRecord] = []
         self.membership_log: list[tuple[int, str, int]] = []
-        self.sim = _MeshClock()
         # --- execution counters (mirror HeterogeneousTrainer's) ---
         self.accum_calls = 0       # jitted training executions
         self.accum_traces = 0      # XLA traces (one per distinct bucket)
         self.timing_reruns = 0     # post-compile re-executions (timing only)
+        # (dispatch_ts, completion_ts) per worker for the last concurrent
+        # BSP round (concurrency diagnostics; None until one ran)
+        self.last_round_stamps: Optional[list[tuple[float, float]]] = None
         self.worker_buckets: list[set[int]] = [set() for _ in range(self.k)]
-        # --- measurement state ---
+        # --- slice placement + per-worker compiled calls ---
+        # devices with the data axes flattened to the front: row i is the
+        # i-th data-axis position (all model-axis columns at that position)
+        dev = np.asarray(mesh.devices)
+        names = list(mesh.axis_names)
+        didx = [names.index(a) for a in self._daxes]
+        oidx = [i for i in range(dev.ndim) if i not in didx]
+        self._other_axes = tuple(names[i] for i in oidx)
+        dev = np.transpose(dev, didx + oidx)
+        self._flat_devices = dev.reshape(
+            (self.data_extent,) + dev.shape[len(didx):])
+        self._full_replicated = NamedSharding(mesh, P())
+        self._want_concurrent = bool(concurrent)
+        self.concurrent = False
+        self.slice_plan: Optional[SlicePlan] = None
+        self._exec: list[_WorkerExec] = []
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pool_size = 0
+        self._reconfigure_execution()
+        # --- measurement state + event queue ---
         self._ewma: list[Optional[float]] = [None] * self.k
-        self._gradfn = self._build_gradfn(loss_and_grad)
+        self.time_model = _MeasuredTimeModel(self.k, time_alpha)
+        self.sim = self.time_model   # Session/metrics read trainer.sim.time
         self._opt_update = jax.jit(optimizer.update)
         self.batches = self._initial_batches()
+        self.engine = EventEngine(self.time_model)
         self.controller = None
         if cfg.batching == "dynamic":
             self.controller = make_controller(self.batches, cfg.controller)
 
+    # ----------------------------------------------------- execution setup
+
+    def _make_exec(self, mesh_obj: Mesh, daxes: tuple,
+                   slice_: Optional[tuple[int, int]]) -> _WorkerExec:
+        """Jitted shard_map over ``mesh_obj``: masked local grad sums +
+        ``weighted_psum`` (gradient-exactness argument: DESIGN.md §11-§12).
+
+        Rows of the padded batch are sharded over ``daxes``; each shard
+        differentiates the masked SUM loss of its rows, and the single
+        cross-shard division by the global mask-weight sum realizes the
+        Eq. 2-3 weighted mean exactly (padding rows: mask 0 => zero grad,
+        zero weight).  One XLA trace per distinct bucket shape per slice.
+        """
+        quantum = int(math.prod(mesh_obj.shape[a] for a in daxes))
+        bucket_base = quantum * -(-self.cfg.microbatch // quantum)
+        loss_and_grad = self._loss_and_grad
+
+        def worker_fn(params, batch, mask):
+            self.accum_traces += 1  # python side effect: runs at trace time
+            (loss_sum, w_sum, _aux), grads = loss_and_grad(
+                params, batch, mask)
+            g_mean = weighted_psum(grads, w_sum, daxes)
+            return (g_mean, jax.lax.psum(loss_sum, daxes),
+                    jax.lax.psum(w_sum, daxes))
+
+        sharded = shard_map(
+            worker_fn, mesh_obj,
+            in_specs=(P(), P(daxes), P(daxes)),
+            out_specs=(P(), P(), P()),
+            # grads ARE replicated over non-data axes (identical inputs and
+            # deterministic compute per slice); 0.4's static rep-checker
+            # cannot always prove it, so the check is off
+            check_vma=False)
+        # the stacked data/mask buffers are never reused after the call
+        # (the solo rerun re-transfers from host), so donate them where the
+        # backend can actually alias; on CPU donation is a warning no-op
+        donate = () if jax.default_backend() == "cpu" else (1, 2)
+        return _WorkerExec(
+            mesh=mesh_obj, daxes=daxes, quantum=quantum,
+            bucket_base=bucket_base,
+            gradfn=jax.jit(sharded, donate_argnums=donate),
+            slice=slice_,
+            data_sharding=NamedSharding(mesh_obj, P(daxes)),
+            params_sharding=NamedSharding(mesh_obj, P()),
+        )
+
+    def _reconfigure_execution(
+            self, plan: Optional[SlicePlan] = None) -> None:
+        """(Re)build per-worker execution records for the current k.
+
+        Concurrent mode when the data axis has at least one device per
+        worker; otherwise all workers time-multiplex one full-axis record.
+        Unchanged slices keep their record (and its jit cache); workers
+        whose placement changed get a fresh record and a cleared bucket
+        set — their old compiled shapes no longer apply (DESIGN.md §12).
+        """
+        old = list(self._exec)
+        was_concurrent = self.concurrent
+        concurrent = self._want_concurrent and self.k <= self.data_extent
+        if concurrent and plan is None:
+            # equal device shares: the heterogeneity lives in the batch
+            # sizes, not the slice widths, so slices stay maximally stable
+            plan = plan_slices(self.data_extent, self.k)
+        self.concurrent = concurrent
+        self.slice_plan = plan if concurrent else None
+        if not concurrent:
+            shared = old[0] if (old and not was_concurrent) else \
+                self._make_exec(self.mesh, self._daxes, None)
+            new = [shared] * self.k
+        else:
+            by_slice = {rec.slice: rec for rec in old} if was_concurrent \
+                else {}
+            new = []
+            for start, length in self.slice_plan.slices:
+                rec = by_slice.get((start, length))
+                if rec is None:
+                    sub = self._flat_devices[start:start + length]
+                    submesh = Mesh(sub, ("data",) + self._other_axes)
+                    rec = self._make_exec(submesh, ("data",), (start, length))
+                new.append(rec)
+        for j in range(min(len(old), self.k)):
+            if new[j] is not old[j]:
+                self.worker_buckets[j] = set()
+        self._exec = new
+
+    def _await_pool(self) -> ThreadPoolExecutor:
+        """Awaiter threads (one per in-flight worker) for completion
+        timestamps; grown on membership so no await ever queues."""
+        if self._pool is None or self._pool_size < self.k:
+            if self._pool is not None:
+                self._pool.shutdown(wait=False)
+            self._pool_size = max(self.k, 4)
+            self._pool = ThreadPoolExecutor(
+                max_workers=self._pool_size, thread_name_prefix="mesh-await")
+        return self._pool
+
     # ------------------------------------------------------------- planning
 
+    def bucket_for(self, worker: int, batch: int) -> int:
+        """Worker's ladder rung for ``batch`` (anchored at its slice)."""
+        rec = self._exec[worker]
+        return bucket_up(batch, base=rec.bucket_base, growth=self.growth,
+                         quantum=rec.quantum)
+
     def bucket(self, batch: int) -> int:
-        """This trainer's ladder rung for a batch of ``batch`` examples."""
+        """Full-axis ladder rung (the fallback path's shape for ``batch``)."""
         return bucket_up(batch, base=self.bucket_base, growth=self.growth,
                          quantum=self.quantum)
 
@@ -161,79 +422,82 @@ class MeshTrainer:
             return [cfg.b0] * self.k
         # open-loop init on real hardware: a PROBE round (one measured step
         # per worker at b0, gradients discarded) replaces the simulator's
-        # peek_throughput model — the mesh analogue of §III-B's estimate
-        times = [self._measured_worker_grad(k, cfg.b0)[3]
-                 for k in range(self.k)]
+        # peek_throughput model — the mesh analogue of §III-B's estimate.
+        # The measurements also seed the event engine's rate model, so an
+        # ASP run's first schedule is already measurement-ordered.
+        times = []
+        for k in range(self.k):
+            t = self._measured_worker_grad(k, cfg.b0)[3]
+            self.time_model.observe(k, cfg.b0, t)
+            times.append(t)
         return static_allocation([cfg.b0 / t for t in times], cfg.b0)
 
     # ------------------------------------------------------------ gradients
 
-    def _build_gradfn(self, loss_and_grad: Callable) -> Callable:
-        """Jitted shard_map: masked local grad sums + ``weighted_psum``.
+    def _dispatch(self, worker: int, batch_size: int) -> _Dispatch:
+        """Launch one worker's bucketed gradient call WITHOUT blocking.
 
-        Rows of the padded batch are sharded over the data axis; each shard
-        differentiates the masked SUM loss of its rows, and the single
-        cross-shard division by the global mask-weight sum realizes the
-        Eq. 2-3 weighted mean exactly (padding rows: mask 0 => zero grad,
-        zero weight).  One XLA trace per distinct bucket shape.
+        Fetches bucket-many examples and masks the tail (the same
+        fetch-padded-then-mask idiom as the sim path's remainder
+        microbatch, so the first b_k stream examples are identical to an
+        unpadded fetch), places data on the worker's slice, and returns
+        with the call still in flight — JAX async dispatch unblocked.
         """
-        daxes = self._daxes
+        rec = self._exec[worker]
+        bucket = self.bucket_for(worker, batch_size)
+        self.worker_buckets[worker].add(bucket)
+        host_data = self.next_batch(worker, bucket)
+        mask_host = (np.arange(bucket) < batch_size).astype(np.float32)
+        data = jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, rec.data_sharding), host_data)
+        mask = jax.device_put(jnp.asarray(mask_host), rec.data_sharding)
+        # pin params to ONE canonical sharding (replicated over the worker's
+        # mesh): each slice needs its own replica anyway (a per-slice jit
+        # may not mix device sets with the full mesh), and a drifting input
+        # sharding (uncommitted init params vs committed post-update params)
+        # would trigger silent re-LOWERS — recompiles with no fresh trace —
+        # that the compile-time exclusion below could not detect
+        params = jax.device_put(self.params, rec.params_sharding)
+        traces_before = self.accum_traces
+        t0 = _time.perf_counter()
+        out = rec.gradfn(params, data, mask)
+        self.accum_calls += 1
+        return _Dispatch(
+            worker=worker, out=out, t0=t0,
+            fresh_trace=self.accum_traces > traces_before,
+            host_data=host_data, mask_host=mask_host, bucket=bucket)
 
-        def worker_fn(params, batch, mask):
-            self.accum_traces += 1  # python side effect: runs at trace time
-            (loss_sum, w_sum, _aux), grads = loss_and_grad(
-                params, batch, mask)
-            g_mean = weighted_psum(grads, w_sum, daxes)
-            return (g_mean, jax.lax.psum(loss_sum, daxes),
-                    jax.lax.psum(w_sum, daxes))
-
-        sharded = shard_map(
-            worker_fn, self.mesh,
-            in_specs=(P(), P(daxes), P(daxes)),
-            out_specs=(P(), P(), P()),
-            # grads ARE replicated over non-data axes (identical inputs and
-            # deterministic compute per slice); 0.4's static rep-checker
-            # cannot always prove it, so the check is off
-            check_vma=False)
-        return jax.jit(sharded)
+    def _solo_rerun(self, d: _Dispatch) -> float:
+        """Compile-free timing: the first execution at a bucket paid for
+        tracing+compilation, so re-run once, alone, from the same host data
+        (pure function — result identical and discarded)."""
+        self.timing_reruns += 1
+        rec = self._exec[d.worker]
+        data = jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, rec.data_sharding), d.host_data)
+        mask = jax.device_put(jnp.asarray(d.mask_host), rec.data_sharding)
+        params = jax.device_put(self.params, rec.params_sharding)
+        t0 = _time.perf_counter()
+        rerun = rec.gradfn(params, data, mask)
+        jax.block_until_ready(rerun)
+        return _time.perf_counter() - t0
 
     def _measured_worker_grad(self, worker: int, batch_size: int):
-        """One device-synced, timed gradient call for ``worker``.
+        """One device-synced, timed gradient call for ``worker`` (solo).
 
         Returns ``(g_mean, loss_sum, weight_sum, seconds)`` where seconds is
         the compile-free, dilation-adjusted wall time of the execution.
+        The ASP path, the probe round, and the sequential fallback all come
+        through here; concurrent BSP rounds use ``_dispatch`` directly.
         """
-        bucket = self.bucket(batch_size)
-        self.worker_buckets[worker].add(bucket)
-        # fetch bucket-many examples and mask the tail — the same
-        # fetch-padded-then-mask idiom as the sim path's remainder
-        # microbatch, so the first b_k stream examples are identical to an
-        # unpadded fetch
-        data = self.next_batch(worker, bucket)
-        mask = jnp.asarray(
-            (jnp.arange(bucket) < batch_size), jnp.float32)
-        shard = NamedSharding(self.mesh, P(self._daxes))
-        data = jax.tree_util.tree_map(
-            lambda x: jax.device_put(x, shard), data)
-        mask = jax.device_put(mask, shard)
-
-        traces_before = self.accum_traces
-        t0 = _time.perf_counter()
-        out = self._gradfn(self.params, data, mask)
-        jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
-        dt = _time.perf_counter() - t0
-        self.accum_calls += 1
-        if self.accum_traces > traces_before:
-            # first execution at this bucket paid for tracing+compilation;
-            # re-run once (pure function, result identical and discarded)
-            # so the controller never sees compile time
-            self.timing_reruns += 1
-            t0 = _time.perf_counter()
-            rerun = self._gradfn(self.params, data, mask)
-            jax.tree_util.tree_map(lambda x: x.block_until_ready(), rerun)
-            dt = _time.perf_counter() - t0
-        g_mean, loss_sum, w_sum = out
-        return g_mean, float(loss_sum), float(w_sum), dt * self.dilation[worker]
+        d = self._dispatch(worker, batch_size)
+        jax.block_until_ready(d.out)
+        dt = _time.perf_counter() - d.t0
+        if d.fresh_trace:
+            dt = self._solo_rerun(d)
+        g_mean, loss_sum, w_sum = d.out
+        return (g_mean, float(loss_sum), float(w_sum),
+                dt * self.dilation[worker])
 
     def _observe_time(self, worker: int, seconds: float) -> float:
         """EWMA filter over measured step times (measurement pipeline; the
@@ -246,26 +510,66 @@ class MeshTrainer:
 
     # ------------------------------------------------------------------ BSP
 
-    def bsp_step(self) -> StepRecord:
-        grads, losses, weights = [], 0.0, 0.0
-        raw_times, smoothed = [], []
+    def _round_concurrent(self):
+        """All workers in flight at once; max-of-workers wall time.
+
+        Dispatch is async (no device syncs between launches), then one
+        awaiter thread per worker stamps that slice's completion the moment
+        it lands.  Per-worker time = own completion − own dispatch; workers
+        that compiled this round get a solo rerun for clean timing.
+        """
+        dispatches = [self._dispatch(k, self.batches[k])
+                      for k in range(self.k)]
+        stamps = list(self._await_pool().map(
+            _ready_timestamp, [d.out for d in dispatches]))
+        # (dispatch, completion) per worker, for concurrency diagnostics:
+        # max(dispatch) < min(completion) ⇔ all K calls were in flight at
+        # once (benchmarks/backend_bench.py asserts this)
+        self.last_round_stamps = [(d.t0, done)
+                                  for d, done in zip(dispatches, stamps)]
+        grads, losses, weights, raw_times = [], 0.0, 0.0, []
+        for d, done in zip(dispatches, stamps):
+            dt = done - d.t0
+            if d.fresh_trace:
+                dt = self._solo_rerun(d)
+            g_mean, loss_sum, w_sum = d.out
+            # slice-committed grads must rejoin the full mesh before the
+            # driver-side lambda combine
+            grads.append(jax.device_put(g_mean, self._full_replicated))
+            losses += float(loss_sum)
+            weights += float(w_sum)
+            raw_times.append(dt * self.dilation[d.worker])
+        return grads, losses, weights, raw_times
+
+    def _round_sequential(self):
+        """Fallback: time-multiplex the full data axis (sum-of-workers)."""
+        grads, losses, weights, raw_times = [], 0.0, 0.0, []
         for k in range(self.k):
             g, ls, ws, dt = self._measured_worker_grad(k, self.batches[k])
             grads.append(g)
             losses += ls
             weights += ws
             raw_times.append(dt)
-            smoothed.append(self._observe_time(k, dt))
+        return grads, losses, weights, raw_times
+
+    def bsp_step(self) -> StepRecord:
+        if self.concurrent and self.k > 1:
+            grads, losses, weights, raw_times = self._round_concurrent()
+        else:
+            grads, losses, weights, raw_times = self._round_sequential()
+        smoothed = [self._observe_time(k, t) for k, t in enumerate(raw_times)]
+        for k, t in enumerate(raw_times):
+            self.time_model.observe(k, self.batches[k], t)
         # Eq. 2-3: lambda-weighted combine (identical to the sim path)
         g = combine_weighted(grads, self.batches)
         self.params, self.opt_state = self._opt_update(
             self.params, g, self.opt_state, jnp.asarray(self.step_idx))
-        # the record/clock keep the round's MEASURED times (same semantics
-        # as the sim backend's StepRecord); only the controller sees the
-        # EWMA-filtered view
-        t_iter = max(raw_times)
-        self.sim.time += t_iter
-        self.sim.iteration += 1
+        # the engine's barrier consumes the round's MEASURED times (same
+        # semantics as the sim backend's StepRecord) and keeps the shared
+        # version counter BSP and ASP staleness both read; only the
+        # controller sees the EWMA-filtered view
+        self.time_model.push_round(raw_times)
+        info = self.engine.bsp_round(self.batches)
         adjusted = False
         if self.controller is not None:
             upd = self.controller.observe(smoothed)
@@ -273,22 +577,70 @@ class MeshTrainer:
             self.batches = upd.batches
         rec = StepRecord(
             step=self.step_idx,
-            sim_time=self.sim.time,
-            iteration_time=t_iter,
+            sim_time=self.time_model.time,
+            iteration_time=info["iteration_time"],
             loss=losses / max(weights, 1e-9),
             batches=list(self.batches),
             adjusted=adjusted,
-            straggler_waste=sum(t_iter - t for t in raw_times) / max(
-                len(raw_times) * t_iter, 1e-9),
+            straggler_waste=info["straggler_waste"],
             worker_times=list(raw_times),
         )
         self.history.append(rec)
         self.step_idx += 1
         return rec
 
+    # ------------------------------------------------------------------ ASP
+
     def asp_step(self) -> StepRecord:
-        raise NotImplementedError(
-            "MeshBackend is BSP-only; use SimBackend for ASP studies")
+        """One global ASP update on the mesh (DESIGN.md §12 event flow).
+
+        The event engine pops the predicted-earliest completion (per-worker
+        EWMA rates learned from real measurements); that worker's gradient
+        is computed — for real, on its slice — against the params it last
+        read, applied with the paper's staleness-weighted lambda scaling,
+        and the measured duration updates the rate model so the emulated
+        timeline tracks the hardware.  Identical staleness/versioning
+        semantics to ``HeterogeneousTrainer.asp_step`` (the queue is the
+        same ``EventEngine``).
+        """
+        eng = self.engine
+        if not eng.scheduled:
+            eng.asp_schedule(self.batches, payload=self.params)
+        ev = eng.asp_next(self.batches)
+        i = ev.worker
+        # gradient on stale params (the params this worker last read)
+        saved = self.params
+        self.params = eng.get_payload(i)
+        g, ls, ws, dt = self._measured_worker_grad(i, self.batches[i])
+        self.params = saved
+        self._observe_time(i, dt)
+        self.time_model.observe(i, self.batches[i], dt)
+        lam = self.batches[i] / sum(self.batches)
+        g = jax.tree_util.tree_map(lambda x: lam * self.k * x, g)
+        if self.concurrent:
+            g = jax.device_put(g, self._full_replicated)
+        self.params, self.opt_state = self._opt_update(
+            self.params, g, self.opt_state, jnp.asarray(self.step_idx))
+        eng.set_payload(i, self.params)
+        adjusted = False
+        if self.controller is not None and eng.version % self.k == 0:
+            # observe each worker's expected iteration time from the rate
+            # model — prediction, not a fresh measurement, mirroring the
+            # sim path's RNG-free peek
+            times = [self.time_model.iteration_time(j, self.batches[j])
+                     for j in range(self.k)]
+            upd = self.controller.observe(times)
+            adjusted = upd.updated
+            self.batches = upd.batches
+        rec = StepRecord(
+            step=self.step_idx, sim_time=self.time_model.time,
+            iteration_time=float(ev.time), loss=ls / max(ws, 1e-9),
+            batches=list(self.batches), adjusted=adjusted,
+            straggler_waste=float(ev.staleness),
+        )
+        self.history.append(rec)
+        self.step_idx += 1
+        return rec
 
     # ------------------------------------------------------------ membership
 
@@ -308,7 +660,8 @@ class MeshTrainer:
 
     def remove_worker(self, k: int) -> None:
         """Preemption of worker k; its batch share is reabsorbed (Σb_k
-        invariant) and survivors keep controller + measurement state."""
+        invariant), survivors keep controller + measurement state, and the
+        departed worker's devices rejoin the survivors' slices."""
         if self.k <= 1:
             raise ValueError("cannot remove the last worker")
         if not (0 <= k < self.k):
@@ -316,6 +669,9 @@ class MeshTrainer:
         self.membership_log.append((self.step_idx, "remove", k))
         total = sum(self.batches)
         del self._ewma[k], self.dilation[k], self.worker_buckets[k]
+        del self._exec[k]
+        self.time_model.remove_worker(k)
+        self.engine.remove_worker(k)
         # keep survivor indices aligned with the measurement state before
         # any replan reads batches[i]/ewma[i] pairs
         self.batches = [b for j, b in enumerate(self.batches) if j != k]
@@ -324,12 +680,16 @@ class MeshTrainer:
             self.batches = self.controller.remove_worker(k)
         else:
             self.batches = self._measured_replan(total)
+        self._reconfigure_execution(
+            self.slice_plan.remove(k) if self.slice_plan is not None
+            else None)
 
     def add_worker(self, spec: WorkerSpec) -> None:
-        """A replacement joins on the same mesh (model state is already
-        replicated).  ``spec`` resources don't change real hardware; they
-        seed the newcomer's dilation when heterogeneity is being emulated
-        (see :class:`repro.api.backend.MeshBackend`)."""
+        """A replacement joins on the same mesh and gets a carved-out slice
+        (model state is already replicated).  ``spec`` resources don't
+        change real hardware; they seed the newcomer's dilation when
+        heterogeneity is being emulated (see
+        :class:`repro.api.backend.MeshBackend`)."""
         self.membership_log.append((self.step_idx, "add", self.k))
         total = (self.controller.global_batch if self.controller is not None
                  else sum(self.batches))
@@ -338,10 +698,69 @@ class MeshTrainer:
         self.worker_buckets.append(set())
         self.dilation.append(self._dilation_for_spec(spec)
                              if self._dilation_for_spec is not None else 1.0)
+        self.time_model.add_worker()
         if self.controller is not None:
             self.batches = self.controller.add_worker(total / self.k)
         else:
             self.batches = self._measured_replan(total)
+        self._reconfigure_execution(
+            self.slice_plan.add() if (self.slice_plan is not None
+                                      and self.k <= self.data_extent)
+            else None)
+        # the newcomer reads the CURRENT params and, if an ASP schedule is
+        # live, dispatches immediately (predicted via the rate-model mean)
+        self.engine.add_worker(self.batches[-1], payload=self.params)
+
+    # ------------------------------------------------------------ checkpoint
+
+    def exec_state_dict(self) -> dict:
+        """Mesh execution state for ``Session.save`` (DESIGN.md §12):
+        measurement EWMAs, the engine's rate model + clock, bucket-ladder
+        caches, the slice assignment, and the dilation factors.  Everything
+        here is JSON-serializable (the checkpoint metadata sidecar)."""
+        return {
+            "extent": self.data_extent,
+            "concurrent": self.concurrent,
+            "slices": ([list(s) for s in self.slice_plan.slices]
+                       if self.slice_plan is not None else None),
+            "ewma": list(self._ewma),
+            "rates": list(self.time_model.rate),
+            "clock": {"time": self.time_model.time,
+                      "iteration": self.time_model.iteration},
+            "buckets": [sorted(b) for b in self.worker_buckets],
+            "dilation": list(self.dilation),
+        }
+
+    def load_exec_state_dict(self, st: dict) -> None:
+        """Inverse of :meth:`exec_state_dict` (bit-identical controller-
+        facing state; compiled executables are re-traced lazily on the
+        first post-restore dispatch per bucket)."""
+        if int(st["extent"]) != self.data_extent:
+            raise ValueError(
+                f"checkpoint was taken on a mesh with data extent "
+                f"{st['extent']}, this mesh has {self.data_extent} — "
+                f"rebuild the Experiment on a matching mesh")
+        slices = st["slices"]
+        if bool(st["concurrent"]) != (slices is not None) or \
+                (slices is None) != (self.slice_plan is None):
+            raise ValueError(
+                "checkpoint and session disagree on concurrent slicing "
+                "(worker count vs data-axis width changed, or inconsistent "
+                "checkpoint payload?)")
+        if slices is not None:
+            plan = SlicePlan(
+                extent=self.data_extent, quantum=1,
+                slices=tuple((int(a), int(b)) for a, b in slices))
+            if plan.slices != self.slice_plan.slices:
+                self._reconfigure_execution(plan)
+        self._ewma = [None if v is None else float(v) for v in st["ewma"]]
+        self.time_model.rate = [None if v is None else float(v)
+                                for v in st["rates"]]
+        self.time_model.time = float(st["clock"]["time"])
+        self.time_model.iteration = int(st["clock"]["iteration"])
+        self.worker_buckets = [set(int(x) for x in b)
+                               for b in st["buckets"]]
+        self.dilation = [float(d) for d in st["dilation"]]
 
 
 def dilation_from_specs(specs: Sequence[WorkerSpec],

@@ -1,0 +1,116 @@
+"""Slice-assignment planner (core.placement, DESIGN.md §12): property tests
+for the disjoint / exhaustive / quantum-aligned invariants, weighted
+apportionment, and rebalancing across add/remove sequences."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import SlicePlan, plan_slices
+
+
+def check_invariants(plan: SlicePlan) -> None:
+    """THE contract: slices tile [0, extent) disjointly in whole quanta."""
+    covered = []
+    for w in range(plan.k):
+        covered.extend(plan.devices_of(w))
+    assert covered == list(range(plan.extent))          # disjoint+exhaustive
+    for start, length in plan.slices:
+        assert start % plan.quantum == 0                 # quantum-aligned
+        assert length >= plan.quantum
+        assert length % plan.quantum == 0
+
+
+class TestPlanSlices:
+    @given(st.integers(1, 64), st.integers(1, 4), st.integers(1, 16))
+    def test_plan_is_disjoint_exhaustive_aligned(self, units, quantum, k):
+        extent = units * quantum
+        k = min(k, units)
+        plan = plan_slices(extent, k, quantum=quantum)
+        check_invariants(plan)
+        assert plan.k == k
+
+    @given(st.integers(2, 64), st.integers(2, 8))
+    def test_equal_weights_split_evenly(self, units, k):
+        k = min(k, units)
+        plan = plan_slices(units, k)
+        assert max(plan.lengths) - min(plan.lengths) <= 1
+
+    @given(st.lists(st.floats(0.1, 10.0), min_size=2, max_size=6))
+    def test_weights_bias_the_split(self, weights):
+        extent = 64
+        plan = plan_slices(extent, len(weights), weights=weights)
+        check_invariants(plan)
+        # the heaviest worker never gets a smaller slice than the lightest
+        hi = max(range(len(weights)), key=lambda i: weights[i])
+        lo = min(range(len(weights)), key=lambda i: weights[i])
+        assert plan.lengths[hi] >= plan.lengths[lo]
+
+    def test_deterministic(self):
+        a = plan_slices(16, 3, weights=[1.0, 2.0, 3.0])
+        b = plan_slices(16, 3, weights=[1.0, 2.0, 3.0])
+        assert a == b
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            plan_slices(4, 0)
+        with pytest.raises(ValueError):
+            plan_slices(4, 5)                  # more workers than devices
+        with pytest.raises(ValueError):
+            plan_slices(6, 2, quantum=4)       # extent not quantum-aligned
+        with pytest.raises(ValueError):
+            plan_slices(8, 2, weights=[1.0])   # weight/worker mismatch
+        with pytest.raises(ValueError):
+            plan_slices(8, 2, weights=[1.0, -1.0])
+        with pytest.raises(ValueError):
+            SlicePlan(extent=4, quantum=1, slices=((0, 2), (3, 1)))  # gap
+        with pytest.raises(ValueError):
+            SlicePlan(extent=4, quantum=1, slices=((0, 2), (2, 3)))  # over
+        with pytest.raises(ValueError):
+            SlicePlan(extent=4, quantum=2, slices=((0, 1), (1, 3)))  # align
+
+
+class TestRebalance:
+    @settings(max_examples=25)
+    @given(st.integers(4, 32), st.integers(1, 3),
+           st.lists(st.sampled_from(["add", "remove", "remove0"]),
+                    min_size=1, max_size=8))
+    def test_invariants_hold_across_membership(self, units, quantum, ops):
+        """Any add/remove sequence preserves the planner contract — the
+        property the mesh trainer's slice replans lean on."""
+        extent = units * quantum
+        plan = plan_slices(extent, min(3, units), quantum=quantum)
+        for op in ops:
+            if op == "add":
+                if plan.k + 1 > units:
+                    continue
+                plan = plan.add()
+            else:
+                if plan.k <= 1:
+                    continue
+                plan = plan.remove(0 if op == "remove0" else plan.k - 1)
+            check_invariants(plan)
+
+    def test_remove_redistributes_proportionally(self):
+        plan = plan_slices(16, 4, weights=[1.0, 1.0, 1.0, 5.0])
+        shrunk = plan.remove(0)
+        check_invariants(shrunk)
+        assert shrunk.k == 3
+        # the big worker keeps the biggest slice after the rebalance
+        assert shrunk.lengths[-1] == max(shrunk.lengths)
+
+    def test_add_carves_an_average_share(self):
+        plan = plan_slices(12, 3)
+        grown = plan.add()
+        check_invariants(grown)
+        assert grown.k == 4
+        assert max(grown.lengths) - min(grown.lengths) <= 1
+
+    def test_rebalance_errors(self):
+        plan = plan_slices(4, 4)
+        with pytest.raises(ValueError):
+            plan.add()                 # no devices left to carve
+        with pytest.raises(ValueError):
+            plan.remove(7)
+        with pytest.raises(ValueError):
+            plan_slices(4, 1).remove(0)
