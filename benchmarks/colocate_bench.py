@@ -1,0 +1,263 @@
+"""Co-located serving + training benchmark (DESIGN.md §13).
+
+``--mode shared`` (default): one homogeneous Experiment on the 8-fake-
+device debug mesh with a decode loop time-multiplexing the LAST worker's
+slice.  The decode seconds are charged onto that worker's measured step
+time, so the batch controller sees the interference as heterogeneity and
+re-equalizes: the CSV shows the contended worker's controller-chosen
+batch dropping while the per-round worker times (decode charge included)
+stay within 10% of the uncontended workers' — the paper's
+equal-iteration-time invariant holding under serve interference.
+Assertions are armed when ``--steps`` >= 30 (steady state needs rounds).
+
+``--mode policy``: the dedicated-slice variant.  A traffic burst breaches
+the serve-latency SLO, the policy grows the serve slice (training yields
+devices through the replan path), the burst ends, and the freed capacity
+is returned — the CSV logs every grow/shrink with the training extent.
+
+Prints ``name,value,derived`` CSV like the other drivers.
+
+    PYTHONPATH=src python benchmarks/colocate_bench.py [--steps 120]
+    PYTHONPATH=src python benchmarks/colocate_bench.py --mode policy
+
+CI smokes both modes with ``--steps 6`` as wiring checks.  See
+``benchmarks/README.md`` for the row guide.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from backend_bench import _force_cpu_devices  # noqa: E402
+
+
+def _mean(xs):
+    return sum(xs) / max(len(xs), 1)
+
+
+def experiment(mesh, serve, args):
+    from repro.api import ClusterSpec, Experiment, TrainConfig, MeshBackend
+    from repro.api import paper_workload
+    from repro.core import ControllerConfig
+    from repro.optim import adam
+
+    return Experiment(
+        workload=paper_workload("mnist-cnn"),
+        # homogeneous fleet + uniform initial batches: every bit of
+        # heterogeneity the controller reacts to comes from the decode
+        # traffic, not from declared worker sizes or a noisy probe round.
+        # Sequential dispatch so each worker's measured time is its own
+        # solo wall time (∝ batch): the debug mesh's fake devices share a
+        # few host cores, so concurrent in-flight calls would contend with
+        # each other and bury the interference signal in scheduler noise
+        # (same rationale as backend_bench's informational wall A/B).
+        cluster=ClusterSpec.homogeneous(
+            30, args.workers, workload="mnist-cnn", seed=args.seed,
+            backend=MeshBackend(mesh=mesh, concurrent=False), serve=serve),
+        optimizer=adam(2e-3),
+        # adaptive_bmax off: the paper's throughput guard reacts to clean
+        # simulated cliffs; on measured times at toy scale a noisy 2% drop
+        # would freeze the plan mid-transient (DESIGN.md §13).  Dead band
+        # tightened from the paper's 5%: resizes are zero-cost here (§2),
+        # and the equal-time assertion below needs the equilibrium offset
+        # the band tolerates to be small against the 10% acceptance window
+        config=TrainConfig(b0=args.b0, microbatch=args.b0 // 4,
+                           batching="dynamic", init_allocation="uniform",
+                           max_steps=args.steps, seed=args.seed,
+                           controller=ControllerConfig(
+                               adaptive_bmax=False,
+                               min_iters_between_updates=2)),
+    )
+
+
+def run_shared(args, mesh) -> None:
+    from repro.api import ServeSpec
+
+    serve = ServeSpec(mode="shared", slots=args.slots,
+                      requests_per_round=args.rate,
+                      decode_steps_per_round=args.decode_steps,
+                      prompt_len=3, max_new_tokens=6)
+    session = experiment(mesh, serve, args).session()
+    trainer = session.trainer
+    ewma_log = []
+    for _rec in session:
+        # the controller-facing view: the measurement pipeline's EWMA of
+        # charged per-worker times, snapshotted each round
+        ewma_log.append(list(trainer._ewma))
+    hist = trainer.history
+    contended = trainer.serve_slice.shared_with
+    others = [i for i in range(trainer.k) if i != contended]
+
+    b_first, b_last = hist[0].batches, hist[-1].batches
+    print(f"colocate/contended_worker,{contended},serve slice "
+          f"{trainer.serve_slice.start}+{trainer.serve_slice.length} "
+          f"time-multiplexed")
+    print(f"colocate/contended_batch_first,{b_first[contended]},"
+          f"batches_first={b_first}")
+    print(f"colocate/contended_batch_last,{b_last[contended]},"
+          f"batches_last={b_last}")
+    drop = b_last[contended] / max(b_first[contended], 1)
+    print(f"colocate/contended_batch_ratio,{drop:.4g},"
+          f"last/first controller-chosen batch on the contended worker")
+
+    # equal-iteration-time invariant under interference, judged on the
+    # quantity the controller drives to equality: the measurement
+    # pipeline's EWMA of charged per-worker round times (raw per-round
+    # wall times on the shared-core fake-device host carry multi-x
+    # scheduler spikes that no point statistic fully tames — the smoothed
+    # series is both the control variable and spike-diluted)
+    half = len(hist) // 2
+    tail = hist[half:]
+    smoothed = [
+        _mean([ewma_log[i][k] for i in range(half, len(ewma_log))])
+        for k in range(trainer.k)]
+    ratio = smoothed[contended] / max(
+        _mean([smoothed[i] for i in others]), 1e-12)
+    print(f"colocate/round_time_ratio,{ratio:.4g},"
+          f"controller-facing EWMA round time, contended / uncontended, "
+          f"averaged over last {len(tail)} rounds (1.0 = equalized)")
+
+    def trimmed(xs):
+        xs = sorted(xs)
+        cut = max(len(xs) // 10, 1) if len(xs) >= 5 else 0
+        return _mean(xs[cut:len(xs) - cut] if cut else xs)
+
+    per_worker = [
+        trimmed([r.worker_times[i] for r in tail])
+        for i in range(trainer.k)]
+    raw_ratio = per_worker[contended] / max(
+        _mean([per_worker[i] for i in others]), 1e-12)
+    print(f"colocate/round_time_ratio_raw,{raw_ratio:.4g},"
+          f"trimmed-mean RAW per-round times (informational: spikier than "
+          f"the controller's filtered view)")
+    adjusted = sum(r.adjusted for r in hist)
+    print(f"colocate/adjustments,{adjusted},controller updates over "
+          f"{len(hist)} rounds")
+
+    serve_stats = trainer.serve_stats()
+    dd = serve_stats["decode_step_ms"]
+    print(f"colocate/decode_step_ms_p50,{dd['p50']:.4g},"
+          f"p95={dd['p95']:.4g} p99={dd['p99']:.4g}")
+    print(f"colocate/queue_delay_mean,"
+          f"{serve_stats['queue_delay_steps']['mean']:.4g},"
+          f"p95={serve_stats['queue_delay_steps']['p95']:.4g} (scheduler "
+          f"steps from arrival to admission)")
+    print(f"colocate/requests_finished,{serve_stats['requests_finished']},"
+          f"submitted={serve_stats['requests_submitted']} "
+          f"queued={serve_stats['requests_queued']}")
+    print(f"colocate/charged_seconds,"
+          f"{serve_stats['charged_seconds']:.4g},decode seconds charged to "
+          f"worker {contended}'s measured step times")
+
+    if args.steps < 30:
+        print("colocate/asserts,0,skipped (--steps < 30: no steady state)")
+        return
+    assert serve_stats["charged_seconds"] > 0, "no interference was charged"
+    assert b_last[contended] < b_first[contended], (
+        f"contended batch should drop: {b_first} -> {b_last}")
+    assert b_last[contended] < min(b_last[i] for i in others), (
+        f"contended worker should hold the smallest batch: {b_last}")
+    assert 0.9 <= ratio <= 1.1, (
+        f"equal-iteration-time invariant violated under interference: "
+        f"contended/uncontended mean round time = {ratio:.3f} "
+        f"(per-worker means: {per_worker})")
+    print("colocate/asserts,1,batch dropped + round times within 10%")
+
+
+def run_policy(args, mesh) -> None:
+    from repro.api import ServeSpec
+
+    burst = max(args.steps // 3, 2)
+    serve = ServeSpec(mode="dedicated", devices=1, slots=args.slots,
+                      requests_per_round=2.0,     # deliberate overload
+                      decode_steps_per_round=args.decode_steps,
+                      prompt_len=3, max_new_tokens=6,
+                      slo_queue_delay=1.0, check_every=2, idle_patience=2)
+    session = experiment(mesh, serve, args).session()
+    trainer = session.trainer
+    extent_log = []
+    for i, _rec in enumerate(session):
+        extent_log.append(trainer.train_extent)
+        if i + 1 == burst:
+            # the burst ends: stop arrivals so the queue drains and the
+            # policy returns the devices it took
+            trainer.traffic.rate = 0.0
+
+    grows = [a for a in trainer.policy_log if a[1] == "grow"]
+    shrinks = [a for a in trainer.policy_log if a[1] == "shrink"]
+    print(f"colocate/policy_grow_actions,{len(grows)},"
+          f"training yielded a device at steps {[s for s, _, _ in grows]}")
+    print(f"colocate/policy_shrink_actions,{len(shrinks)},"
+          f"capacity returned at steps {[s for s, _, _ in shrinks]}")
+    print(f"colocate/reserve_final,{trainer.reserve},"
+          f"baseline={serve.devices} max_reached="
+          f"{max(r for _, _, r in trainer.policy_log) if trainer.policy_log else serve.devices}")
+    print(f"colocate/train_extent_min,{min(extent_log)},"
+          f"of {trainer.data_extent} data-axis devices (burst of {burst} "
+          f"rounds at rate {serve.requests_per_round})")
+    stats = trainer.serve_stats()
+    print(f"colocate/policy_queue_delay_mean,"
+          f"{stats['queue_delay_steps']['mean']:.4g},"
+          f"the burst deliberately breaches the SLO target "
+          f"{serve.slo_queue_delay} to force the grow")
+    if args.steps >= 30:
+        assert grows, "overload never triggered a grow (training yield)"
+        assert shrinks, "drained queue never returned capacity"
+        assert trainer.reserve == serve.devices, (
+            f"reserve should return to the baseline {serve.devices}, "
+            f"ended at {trainer.reserve}")
+        print("colocate/asserts,1,grow under SLO breach + capacity returned")
+    else:
+        print("colocate/asserts,0,skipped (--steps < 30: no steady state)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--mode", default="shared",
+                    choices=["shared", "policy"],
+                    help="shared = equal-time invariant under charged "
+                         "interference; policy = dedicated slice grow/shrink")
+    ap.add_argument("--steps", type=int, default=120,
+                    help="training rounds; the equal-time assertion "
+                         "averages the last half, and per-round wall "
+                         "times on a small shared-core host are noisy "
+                         "enough to need a long tail")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="fake CPU devices for the debug mesh")
+    ap.add_argument("--workers", type=int, default=3)
+    ap.add_argument("--b0", type=int, default=256,
+                    help="per-worker initial batch; large enough that "
+                         "training compute dominates per-call dispatch "
+                         "overhead on the debug mesh")
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--rate", type=float, default=1.2,
+                    help="decode requests per training round (shared mode); "
+                         "just under the decode capacity, so the queue "
+                         "stays saturated and the per-round interference "
+                         "charge is steady")
+    ap.add_argument("--decode-steps", type=int, default=4,
+                    help="max scheduler steps per training round")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    _force_cpu_devices(args.devices)
+
+    from repro.launch.mesh import make_debug_mesh
+
+    mesh = make_debug_mesh(args.devices)
+    print("name,value,derived")
+    if args.mode == "shared":
+        run_shared(args, mesh)
+    else:
+        run_policy(args, mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,8 @@ One front door for training, elasticity, benchmarks, and the CLI:
     ``sum_loss_workload``, ``paper_workload``, ``lm_workload``);
   * :mod:`repro.api.cluster` — declarative ClusterSpec (h-level / mixed /
     homogeneous / explicit) with typed membership-event schedules
-    (``AddWorker`` / ``RemoveWorker`` / ``At``);
+    (``AddWorker`` / ``RemoveWorker`` / ``At``) and optional co-located
+    serving (``ServeSpec``, DESIGN.md §13);
   * :mod:`repro.api.backend` — execution backends: ``SimBackend``
     (simulated clock, the golden default) and ``MeshBackend`` (ragged SPMD
     on a real JAX mesh, measured step times — DESIGN.md §11), selected via
@@ -22,7 +23,13 @@ canonical ~20-line demo and ``examples/mesh_train.py`` the sim-vs-mesh one.
 """
 
 from repro.api.backend import Backend, MeshBackend, SimBackend
-from repro.api.cluster import At, AddWorker, ClusterSpec, RemoveWorker
+from repro.api.cluster import (
+    At,
+    AddWorker,
+    ClusterSpec,
+    RemoveWorker,
+    ServeSpec,
+)
 from repro.api.experiment import Experiment
 from repro.api.session import (
     CheckpointHook,
@@ -58,6 +65,7 @@ __all__ = [
     "MeshBackend",
     "MetricCollector",
     "RemoveWorker",
+    "ServeSpec",
     "Session",
     "SimBackend",
     "TrainConfig",

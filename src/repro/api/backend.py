@@ -58,6 +58,12 @@ class SimBackend:
     name: str = dataclasses.field(default="sim", init=False)
 
     def build_trainer(self, *, workload, cluster, optimizer, cfg):
+        if getattr(cluster, "serve", None) is not None:
+            raise ValueError(
+                "co-located serving (ClusterSpec.serve) needs real devices "
+                "to share — use ClusterSpec(backend=MeshBackend(...)); the "
+                "sim backend has no mesh to carve a serve slice from "
+                "(DESIGN.md §13)")
         return ElasticTrainer(
             sim=cluster.build(),
             init_params=workload.init,
@@ -96,6 +102,12 @@ class MeshBackend:
     `benchmarks/backend_bench.py` timing A/B uses this).  All sync modes
     (``bsp``/``asp``), elastic membership, and ``Session.save/restore``
     are supported.
+
+    When the cluster carries a ``ServeSpec`` (``ClusterSpec(serve=...)``)
+    the built trainer is a :class:`repro.train.colocate.ColocatedMeshTrainer`:
+    a continuous-batching decode loop co-located on a serve slice of the
+    same mesh, with the SLO preemption policy resizing that slice through
+    the training replan path (DESIGN.md §13; BSP only).
     """
 
     mesh: Optional[object] = None
@@ -121,7 +133,7 @@ class MeshBackend:
                 cluster.workers, amdahl_p=cluster.sim_workload.amdahl_p)
         else:
             worker_dilation = list(self.dilation)
-        return MeshTrainer(
+        kw = dict(
             mesh=mesh,
             num_workers=len(cluster.workers),
             init_params=workload.init,
@@ -135,3 +147,9 @@ class MeshBackend:
             dilation_for_spec=dilation_for_spec,
             concurrent=self.concurrent,
         )
+        serve = getattr(cluster, "serve", None)
+        if serve is not None:
+            from repro.train.colocate import ColocatedMeshTrainer
+
+            return ColocatedMeshTrainer(serve=serve, **kw)
+        return MeshTrainer(**kw)

@@ -27,6 +27,7 @@ from repro.het.simulator import (
     homogeneous_cluster,
     mixed_gpu_cpu_cluster,
 )
+from repro.serve.colocate import ServeSpec
 
 # ------------------------------------------------------- membership events
 
@@ -104,6 +105,13 @@ class ClusterSpec:
     (count + declared sizes); on a mesh backend the declared sizes only
     matter when heterogeneity is being emulated
     (``MeshBackend(dilation="from-spec")``).
+
+    ``serve`` co-locates a continuous-batching decode loop on the same
+    mesh (:class:`~repro.serve.colocate.ServeSpec`, DESIGN.md §13): a
+    serve slice is carved from the data axis (dedicated devices, or
+    time-multiplexing the last worker's), decode latency percentiles are
+    reported in the run result, and the batch controller re-equalizes
+    around the decode interference.  Mesh backend + ``sync="bsp"`` only.
     """
 
     workers: list[WorkerSpec]
@@ -112,6 +120,7 @@ class ClusterSpec:
     seed: int = 0
     schedule: list[ClusterEvent] = dataclasses.field(default_factory=list)
     backend: Optional[object] = None   # Backend protocol; None -> SimBackend
+    serve: Optional[ServeSpec] = None  # co-located serving (mesh only)
 
     # ------------------------------------------------------- constructors
 

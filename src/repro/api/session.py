@@ -263,6 +263,12 @@ class Session:
         }
         if hasattr(trainer, "membership_log"):
             result["membership_log"] = trainer.membership_log
+        if hasattr(trainer, "serve_stats"):
+            # co-located serving (DESIGN.md §13): the run reports BOTH the
+            # training step times (history/worker_times, charged with any
+            # shared-device decode interference) and the decode side —
+            # latency percentiles, queue pressure, policy actions
+            result["serve"] = trainer.serve_stats()
         for h in self.hooks:
             h.on_run_end(self, result)
         return result

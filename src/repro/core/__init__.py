@@ -34,7 +34,12 @@ from repro.core.grad import (
     combine_weighted,
     weighted_psum,
 )
-from repro.core.placement import SlicePlan, plan_slices
+from repro.core.placement import (
+    ServeSlice,
+    SlicePlan,
+    carve_serve,
+    plan_slices,
+)
 
 __all__ = [
     "BatchController",
@@ -47,11 +52,13 @@ __all__ = [
     "PIController",
     "PIDController",
     "ProportionalController",
+    "ServeSlice",
     "SlicePlan",
     "WorkerState",
     "accumulate_microbatch_grads",
     "bucket_ladder",
     "bucket_up",
+    "carve_serve",
     "controller_from_state_dict",
     "make_controller",
     "combine_weighted",

@@ -1,4 +1,5 @@
-"""Worker → device-slice placement along the mesh data axis (DESIGN.md §12).
+"""Worker → device-slice placement along the mesh data axis (DESIGN.md
+§12-§13).
 
 The concurrent mesh execution path (`repro.train.mesh.MeshTrainer`) gives
 each of the K logical workers a *disjoint, contiguous* run of devices along
@@ -26,6 +27,14 @@ A worker's slice length is also its *bucket quantum*: padded batches must
 shard evenly over the slice, so `MeshTrainer` anchors worker k's bucket
 ladder at ``lengths[k]`` (see DESIGN.md §12 for why the ladder bound is
 preserved per worker).
+
+Co-located serving (DESIGN.md §13) carves a :class:`ServeSlice` out of the
+same axis via :func:`carve_serve`: either a *dedicated* run of devices
+withheld from training at the top of the axis (training tiles the rest),
+or a *shared* slice that time-multiplexes the last training worker's
+devices — the decode loop's device time then shows up in that worker's
+measured step time exactly like background-tenant interference in the
+paper's experiments.
 """
 
 from __future__ import annotations
@@ -158,3 +167,76 @@ def plan_slices(extent: int, k: int,
         slices.append((cursor, length))
         cursor += length
     return SlicePlan(extent=extent, quantum=quantum, slices=tuple(slices))
+
+
+# ------------------------------------------------------- co-located serving
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSlice:
+    """Devices the co-located decode loop owns (DESIGN.md §13).
+
+    ``[start, start + length)`` on the flattened data axis.  ``shared_with``
+    names the training worker whose devices the decode loop time-multiplexes
+    (its decode seconds are charged to that worker's measured step time);
+    ``None`` means the slice is *dedicated* — withheld from training
+    placement entirely, so interference shows up as fewer training devices
+    instead of stolen device time.
+    """
+
+    start: int
+    length: int
+    shared_with: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        if self.start < 0 or self.length < 1:
+            raise ValueError(
+                f"serve slice ({self.start}, {self.length}) must have a "
+                f"non-negative start and positive length")
+
+    @property
+    def dedicated(self) -> bool:
+        return self.shared_with is None
+
+    def devices(self) -> range:
+        return range(self.start, self.start + self.length)
+
+
+def carve_serve(extent: int, k: int, serve_devices: int, *,
+                mode: str = "dedicated", quantum: int = 1,
+                weights: Optional[Sequence[float]] = None,
+                ) -> tuple[SlicePlan, ServeSlice]:
+    """Carve a serve slice out of the data axis; plan training on the rest.
+
+    ``mode="dedicated"``: the top ``serve_devices`` devices are withheld
+    from training and the K training workers tile ``extent -
+    serve_devices``.  The serve slice may never consume the whole axis —
+    training fully preempted is a configuration error, reported clearly
+    instead of producing an empty plan.
+
+    ``mode="shared"``: training tiles the full axis and the decode loop
+    time-multiplexes the LAST worker's slice (``serve_devices`` is ignored
+    beyond validation); that worker is the *contended* worker whose
+    measured times absorb the decode interference (DESIGN.md §13).
+    """
+    if mode not in ("dedicated", "shared"):
+        raise ValueError(f"mode must be 'dedicated' or 'shared', got {mode!r}")
+    if serve_devices < 0:
+        raise ValueError(
+            f"serve_devices must be >= 0, got {serve_devices}")
+    if mode == "shared":
+        plan = plan_slices(extent, k, weights, quantum=quantum)
+        start, length = plan.slices[-1]
+        return plan, ServeSlice(start, length, shared_with=k - 1)
+    if serve_devices < quantum or serve_devices % quantum:
+        raise ValueError(
+            f"dedicated serve slice needs a positive multiple of quantum "
+            f"{quantum} devices, got {serve_devices}")
+    train_extent = extent - serve_devices
+    if train_extent < 1:
+        raise ValueError(
+            f"serve slice of {serve_devices} devices consumes the whole "
+            f"{extent}-device data axis — training would be fully "
+            f"preempted; shrink the serve slice or use mode='shared'")
+    plan = plan_slices(train_extent, k, weights, quantum=quantum)
+    return plan, ServeSlice(train_extent, serve_devices, shared_with=None)

@@ -24,6 +24,7 @@ from repro.api import (
     ClusterSpec,
     Experiment,
     MeshBackend,
+    ServeSpec,
     TrainConfig,
     lm_workload,
 )
@@ -65,6 +66,25 @@ def main(argv=None) -> dict:
                          "gain-scheduled PID (DESIGN.md §3)")
     ap.add_argument("--beyond-paper", action="store_true",
                     help="zero-cost resize controller variant (DESIGN.md §2)")
+    ap.add_argument("--serve", action="store_true",
+                    help="co-locate a continuous-batching decode loop on "
+                         "the training mesh (DESIGN.md §13): a serve slice "
+                         "is carved from the data axis, decode latency "
+                         "percentiles land in the summary, and the batch "
+                         "controller re-equalizes around the interference; "
+                         "requires --backend mesh and --sync bsp")
+    ap.add_argument("--serve-mode", default="shared",
+                    choices=["shared", "dedicated"],
+                    help="shared = time-multiplex the last worker's devices "
+                         "(decode seconds charged to its step time); "
+                         "dedicated = withhold --serve-devices devices, SLO "
+                         "policy grows/shrinks the slice")
+    ap.add_argument("--serve-devices", type=int, default=1,
+                    help="dedicated serve-slice width (data-axis devices)")
+    ap.add_argument("--serve-rate", type=float, default=1.0,
+                    help="decode requests arriving per training round")
+    ap.add_argument("--serve-slots", type=int, default=2,
+                    help="concurrent decode sequences (scheduler slots)")
     ap.add_argument("--full-config", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
@@ -81,9 +101,21 @@ def main(argv=None) -> dict:
         ap.error("--interference requires the sim backend: availability "
                  "traces are a simulator concept, and MeshTrainer does not "
                  "emulate them (its dilation factors are static)")
+    serve = None
+    if args.serve:
+        if args.backend != "mesh":
+            ap.error("--serve requires --backend mesh: co-located serving "
+                     "shares the training mesh's devices (DESIGN.md §13)")
+        if args.sync != "bsp":
+            ap.error("--serve requires --sync bsp: the decode loop is "
+                     "multiplexed against BSP round boundaries")
+        serve = ServeSpec(mode=args.serve_mode, devices=args.serve_devices,
+                          slots=args.serve_slots, arch=args.arch,
+                          requests_per_round=args.serve_rate,
+                          seed=args.seed)
     cluster = ClusterSpec.hlevel(args.total_cores, args.hlevel, args.workers,
                                  workload="transformer", seed=args.seed,
-                                 backend=backend)
+                                 backend=backend, serve=serve)
     if args.interference:
         cluster.with_trace(-1, traces.step_interference(5.0, 1e9, 0.3))
 

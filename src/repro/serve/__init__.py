@@ -1,3 +1,4 @@
+from repro.serve.colocate import ServeSpec, ServeTraffic, SLOPolicy
 from repro.serve.engine import (
     ServeConfig,
     cache_length,
@@ -6,6 +7,8 @@ from repro.serve.engine import (
     sample,
     serve_step,
 )
+from repro.serve.scheduler import ContinuousBatcher, Request
 
-__all__ = ["ServeConfig", "cache_length", "generate", "prefill", "sample",
-           "serve_step"]
+__all__ = ["ContinuousBatcher", "Request", "SLOPolicy", "ServeConfig",
+           "ServeSpec", "ServeTraffic", "cache_length", "generate",
+           "prefill", "sample", "serve_step"]

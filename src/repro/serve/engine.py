@@ -1,8 +1,14 @@
-"""Batched serving engine: prefill + KV-cache decode for all LM families.
+"""Batched serving engine: prefill + KV-cache decode (DESIGN.md §6).
 
 Provides the `serve_step` lowered by the decode dry-run shapes
 (decode_32k / long_500k): ONE new token against a cache of seq_len, plus a
-host-level batched-request driver used by the serving example.
+host-level batched-request driver used by the serving example.  The
+continuous-batching scheduler (`repro.serve.scheduler`) drives the same
+decode path slot-by-slot, and the co-located serving trainer
+(`repro.train.colocate`, DESIGN.md §13) runs that scheduler on a slice of
+the training mesh — decode device time is what interferes with training
+there, so this module's step cost is the physical quantity the batch
+controller ends up absorbing.
 """
 
 from __future__ import annotations

@@ -1,4 +1,4 @@
-"""Continuous-batching request scheduler (dynamic batching for serving).
+"""Continuous-batching request scheduler (DESIGN.md §6; co-location §13).
 
 The paper applies dynamic batching to training; serving has the mirror
 problem: request arrival is bursty and sequence lengths vary, so a *static*
@@ -6,10 +6,14 @@ serving batch either queues requests (latency) or runs underfilled
 (throughput). This scheduler maintains a fixed-shape decode batch of
 `slots` sequences (shape-stable for the compiled serve_step) and fills
 freed slots from the queue every step — per-slot masking plays the role the
-per-example weights play in training.
+per-example weights play in training (DESIGN.md §6).
 
-Pure-host logic over the shared serve engine; used by the serving example
-and tested in test_serve_scheduler.py.
+Pure-host logic over the shared serve engine; used by the serving example,
+tested in test_serve_scheduler.py, and driven round-by-round by the
+co-located serving trainer (`repro.train.colocate`, DESIGN.md §13) — pass
+``device=`` to pin the whole decode program onto a carved-out serve slice,
+and read :meth:`ContinuousBatcher.stats` for the queue-pressure signal the
+SLO preemption policy consumes.
 """
 
 from __future__ import annotations
@@ -42,18 +46,31 @@ class ContinuousBatcher:
     """Slot-based continuous batching over a fixed-shape decode program."""
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
-                 cache_len: int = 256, eos_id: Optional[int] = None):
+                 cache_len: int = 256, eos_id: Optional[int] = None,
+                 device=None):
+        """``device`` pins params + caches (and therefore every compiled
+        decode step) onto one jax device — the co-location path places the
+        batcher on its carved-out serve slice this way (DESIGN.md §13)."""
+        if device is not None:
+            params = jax.device_put(params, device)
         self.params = params
         self.cfg = cfg
         self.slots = slots
         self.cache_len = cache_len
         self.eos_id = eos_id
+        self.device = device
         self.queue: deque[Request] = deque()
         self.active: list[Optional[Request]] = [None] * slots
         self.positions = np.zeros(slots, dtype=np.int32)
         self.caches = T.init_caches(cfg, slots, cache_len)
+        if device is not None:
+            self.caches = jax.device_put(self.caches, device)
         self.step_count = 0
         self.finished: list[Request] = []
+        # admission delays of the most recent admissions: the SLO policy's
+        # queue-pressure signal must reflect *current* latency, not a
+        # lifetime average an old burst could latch high forever
+        self.recent_delays: deque[int] = deque(maxlen=64)
 
         def step_fn(params, caches, token, positions, live):
             pos = positions[:, None]
@@ -65,6 +82,23 @@ class ContinuousBatcher:
 
         self._step = jax.jit(step_fn)
         self._next_token = np.zeros(slots, dtype=np.int32)
+
+    def warmup(self) -> None:
+        """Compile the decode program with one throwaway masked step, then
+        restore the pre-warmup state exactly (jax arrays are immutable, so
+        holding the old references is a complete snapshot) — safe both on
+        a fresh batcher and mid-flight after a device migration.  The
+        co-location path (DESIGN.md §13) charges measured decode seconds
+        to a training worker, and the training side excludes compile time
+        from its own measurements — the decode side must be equally clean,
+        so the first *charged* step is never the compiling one."""
+        caches = self.caches
+        positions = self.positions.copy()
+        next_token = self._next_token.copy()
+        self._decode_one(slot_token=(0, 0))
+        self.caches = caches
+        self.positions = positions
+        self._next_token = next_token
 
     # ------------------------------------------------------------ intake
 
@@ -90,6 +124,7 @@ class ContinuousBatcher:
                 continue
             req = self.queue.popleft()
             req.started_step = self.step_count
+            self.recent_delays.append(req.started_step - req.arrived_step)
             self.active[slot] = req
             # prefill the slot token-by-token through the decode path
             # (single compiled program; production would use a prefill
@@ -157,15 +192,24 @@ class ContinuousBatcher:
     # ----------------------------------------------------------- metrics
 
     def stats(self) -> dict:
+        """Queue-pressure snapshot; every entry is a plain float/int and is
+        well-defined on a completely idle batcher (empty queue, no finished
+        requests, all slots free) — the SLO preemption policy
+        (`repro.serve.colocate.SLOPolicy`, DESIGN.md §13) polls this
+        between training rounds, including before any traffic arrived."""
         # queue delay = steps between arrival and admission, independent of
-        # how many tokens the request went on to produce
-        lat = [r.started_step - r.arrived_step
-               for r in self.finished if r.started_step is not None]
+        # how many tokens the request went on to produce; WINDOWED over the
+        # most recent admissions so the policy reacts to current pressure
+        # (a lifetime mean would stay breached long after a burst drained)
+        lat = list(self.recent_delays)
         occ = np.mean([r is not None for r in self.active]) if self.active \
             else 0.0
         return {
             "finished": len(self.finished),
             "queued": len(self.queue),
+            "free_slots": sum(r is None for r in self.active),
             "mean_queue_delay_steps": float(np.mean(lat)) if lat else 0.0,
+            "p95_queue_delay_steps": (float(np.percentile(lat, 95))
+                                      if lat else 0.0),
             "occupancy_now": float(occ),
         }

@@ -1,0 +1,289 @@
+"""Co-located serving + training on one mesh (DESIGN.md §13).
+
+The ROADMAP's "heavy traffic + training" scenario: a continuous-batching
+decode loop (`repro.serve`) runs on a slice of the SAME mesh the
+dynamic-batching trainer owns, and the batch controller absorbs the
+interference the way the paper's controller absorbs a background CPU
+tenant — decode traffic is just another reason a worker's measured
+iteration time went up.
+
+:class:`ColocatedMeshTrainer` extends :class:`repro.train.mesh.MeshTrainer`
+with a serve slice carved from the data axis (`core.placement.carve_serve`):
+
+  * **shared** mode time-multiplexes the LAST training worker's devices:
+    each round the decode loop runs first (serve-latency priority — the
+    shared devices must serve before training claims them), its measured
+    wall seconds are *charged* onto that worker's step time
+    (:meth:`MeshTrainer._charge_interference`), and the controller shrinks
+    the contended worker's batch until all workers — decode interference
+    included — finish together again (the paper's equal-iteration-time
+    invariant, `benchmarks/colocate_bench.py`);
+  * **dedicated** mode withholds ``ServeSpec.devices`` devices from
+    training placement entirely (``MeshTrainer(reserve=...)``); decode
+    work is dispatched while the training round is in flight, so on
+    genuinely disjoint hardware the two overlap.  The
+    :class:`repro.serve.colocate.SLOPolicy` grows the slice when queue
+    pressure breaches the serve SLO (training *yields* devices through
+    :meth:`MeshTrainer.set_reserve`'s replan path) and returns the freed
+    capacity when traffic drains.
+
+BSP only: the serve loop is driven once per barrier round; an ASP
+co-located run has no single round boundary to multiplex against, so the
+backend rejects ``sync="asp"`` with a clear error instead of silently
+starving the decode queue.
+
+Construct via :class:`repro.api.backend.MeshBackend` with
+``ClusterSpec(serve=ServeSpec(...))``, not directly.
+"""
+
+from __future__ import annotations
+
+import time as _time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.placement import ServeSlice
+from repro.models import init_lm, reduced
+from repro.serve.colocate import ServeSpec, ServeTraffic, SLOPolicy
+from repro.serve.scheduler import ContinuousBatcher
+from repro.train.loop import StepRecord
+from repro.train.mesh import MeshTrainer
+
+
+class ColocatedMeshTrainer(MeshTrainer):
+    """MeshTrainer + a co-located continuous-batching decode loop.
+
+    Presents the same Session-facing surface as :class:`MeshTrainer` plus
+    :meth:`serve_stats` (decode latency percentiles, queue pressure,
+    preemption-policy actions) which ``Session.run`` surfaces under the
+    ``"serve"`` result key.
+    """
+
+    def __init__(self, *, serve: ServeSpec, **kw):
+        cfg = kw["cfg"]
+        if cfg.sync != "bsp":
+            raise ValueError(
+                "co-located serving multiplexes the decode loop against BSP "
+                "round boundaries; sync='asp' is not supported — drop the "
+                "ServeSpec or use sync='bsp' (DESIGN.md §13)")
+        reserve = serve.devices if serve.mode == "dedicated" else 0
+        super().__init__(reserve=reserve, **kw)
+        self.serve_spec = serve
+        model_cfg = reduced(get_config(serve.arch))
+        self.serve_model_cfg = model_cfg
+        self.serve_slice: ServeSlice = self._serve_slice_now()
+        self.batcher = ContinuousBatcher(
+            init_lm(jax.random.PRNGKey(serve.seed), model_cfg), model_cfg,
+            slots=serve.slots, cache_len=serve.cache_len,
+            device=self._serve_device())
+        # compile the decode program up front: charged interference must be
+        # compile-free, like the training side's measured times (§12)
+        self.batcher.warmup()
+        self.traffic = ServeTraffic(
+            rate=serve.requests_per_round, prompt_len=serve.prompt_len,
+            max_new_tokens=serve.max_new_tokens,
+            vocab_size=model_cfg.vocab_size, seed=serve.seed)
+        self.policy = SLOPolicy(slo_queue_delay=serve.slo_queue_delay,
+                                idle_patience=serve.idle_patience)
+        self.policy_log: list[tuple[int, str, int]] = []
+        self._decode_walls: list[float] = []
+        self._charged_seconds = 0.0
+        self._round_serve_seconds = 0.0
+
+    # ------------------------------------------------------ serve placement
+
+    def _serve_slice_now(self) -> ServeSlice:
+        """The decode loop's devices under the CURRENT placement.
+
+        Dedicated mode: always the reserved run at the top of the data
+        axis, whatever the training side is doing below it (the same
+        split `core.placement.carve_serve` plans declaratively).  Shared
+        mode tracks the trainer's actual last slice — which membership
+        replans may have resized — and the full-axis fallback shares
+        everything.
+        """
+        if self.serve_spec.mode == "dedicated":
+            return ServeSlice(self.train_extent, self.reserve)
+        if self.slice_plan is not None:
+            start, length = self.slice_plan.slices[-1]
+            return ServeSlice(start, length, shared_with=self.k - 1)
+        return ServeSlice(0, self.train_extent, shared_with=self.k - 1)
+
+    def _serve_device(self):
+        """First device of the serve slice — the whole decode program is
+        pinned there (`ContinuousBatcher(device=...)`)."""
+        return np.ravel(self._flat_devices[self.serve_slice.start])[0]
+
+    def _replace_serve(self) -> None:
+        """Re-derive the serve slice after a replan; migrate the batcher
+        (params + live KV caches) if its device moved."""
+        self.serve_slice = self._serve_slice_now()
+        dev = self._serve_device()
+        if dev is not self.batcher.device:
+            self.batcher.device = dev
+            self.batcher.params = jax.device_put(self.batcher.params, dev)
+            self.batcher.caches = jax.device_put(self.batcher.caches, dev)
+            # jit caches key on placement: re-warm on the new device so the
+            # recompile never lands in a charged (or latency-reported)
+            # decode step; live requests survive (warmup restores state)
+            self.batcher.warmup()
+
+    def set_reserve(self, n: int) -> None:
+        super().set_reserve(n)
+        if hasattr(self, "batcher"):
+            self._replace_serve()
+
+    def load_exec_state_dict(self, st: dict) -> None:
+        super().load_exec_state_dict(st)
+        # restore may rebuild slices directly from the checkpoint plan
+        # (bypassing the set_reserve/membership overrides above): re-derive
+        # the serve slice and migrate the batcher if its device moved
+        self._replace_serve()
+
+    def remove_worker(self, k: int) -> None:
+        super().remove_worker(k)
+        self._replace_serve()
+
+    def add_worker(self, spec) -> None:
+        super().add_worker(spec)
+        self._replace_serve()
+
+    # -------------------------------------------------------- decode rounds
+
+    def _serve_round(self) -> float:
+        """Admit this round's arrivals, run the decode budget; return the
+        measured decode wall seconds (0.0 when the batcher is idle).
+
+        The budget is ``decode_steps_per_round`` scheduler steps — per
+        reserved device in dedicated mode: a wider slice owns
+        proportionally more device time, so a policy ``grow`` genuinely
+        adds serving throughput and the grow ratchet terminates once
+        capacity covers the arrival rate (instead of taking training's
+        devices without ever relieving the SLO breach)."""
+        for req in self.traffic.next_round():
+            self.batcher.submit(req)
+        b = self.batcher
+        if not b.queue and all(r is None for r in b.active):
+            return 0.0
+        budget = self.serve_spec.decode_steps_per_round
+        if self.serve_slice.dedicated:
+            budget *= self.serve_slice.length
+        t0 = _time.perf_counter()
+        for _ in range(budget):
+            if not b.queue and all(r is None for r in b.active):
+                break
+            t1 = _time.perf_counter()
+            b.step()
+            self._decode_walls.append(_time.perf_counter() - t1)
+        return _time.perf_counter() - t0
+
+    def _round_concurrent(self):
+        if self.serve_slice.dedicated:
+            # training in flight on its slices first, decode overlaps on
+            # the disjoint serve slice; awaiters are submitted BEFORE the
+            # decode loop so each training completion is stamped the
+            # moment it lands — the decode wall never inflates the
+            # (uncharged) dedicated-mode training times
+            dispatches = self._dispatch_round()
+            futures = self._submit_awaiters(dispatches)
+            self._round_serve_seconds = self._serve_round()
+            return self._collect_round(dispatches, futures)
+        # shared devices: serve-latency priority applies to the CONTENDED
+        # worker's slice only — the uncontended workers' disjoint slices
+        # dispatch first and overlap the decode loop; the contended worker
+        # dispatches once decode has released its devices.  Per-worker
+        # time is own-completion − own-dispatch, so measurement and the
+        # charge are unaffected by the ordering.
+        c = self.serve_slice.shared_with
+        others = [k for k in range(self.k) if k != c]
+        dispatches = {k: self._dispatch(k, self.batches[k]) for k in others}
+        futures = dict(zip(others, self._submit_awaiters(
+            [dispatches[k] for k in others])))
+        self._round_serve_seconds = self._serve_round()
+        dispatches[c] = self._dispatch(c, self.batches[c])
+        futures[c] = self._submit_awaiters([dispatches[c]])[0]
+        return self._collect_round(
+            [dispatches[k] for k in range(self.k)],
+            [futures[k] for k in range(self.k)])
+
+    def _round_sequential(self):
+        self._round_serve_seconds = self._serve_round()
+        return super()._round_sequential()
+
+    def _charge_interference(self, raw_times: list[float]) -> list[float]:
+        """Shared mode: the contended worker's step time absorbs the
+        measured decode seconds (real wall time, undilated — the decode
+        work is real).  The controller then sees the interference as
+        heterogeneity and re-equalizes (DESIGN.md §13)."""
+        sl = self.serve_slice
+        if sl.shared_with is not None and self._round_serve_seconds > 0.0:
+            raw_times = list(raw_times)
+            raw_times[sl.shared_with] += self._round_serve_seconds
+            self._charged_seconds += self._round_serve_seconds
+        return raw_times
+
+    # ----------------------------------------------------- policy + records
+
+    def bsp_step(self) -> StepRecord:
+        self._round_serve_seconds = 0.0
+        rec = super().bsp_step()
+        self._maybe_apply_policy()
+        return rec
+
+    def _maybe_apply_policy(self) -> None:
+        """Dedicated mode, every ``check_every`` rounds: apply the SLO
+        policy through the replan path (grow = training yields a device,
+        shrink = freed capacity returned; floor = the spec's baseline
+        slice, ceiling = all but one data-axis device)."""
+        sp = self.serve_spec
+        if sp.mode != "dedicated" or self.step_idx % sp.check_every:
+            return
+        action = self.policy.decide(self.batcher.stats())
+        if action == "grow":
+            target = min(self.reserve + 1, self.data_extent - 1)
+        elif action == "shrink":
+            target = max(self.reserve - 1, sp.devices)
+        else:
+            return
+        if target != self.reserve:
+            self.set_reserve(target)
+            self.policy_log.append((self.step_idx, action, target))
+
+    def serve_stats(self) -> dict:
+        """Decode-side run summary (``Session.run`` result key ``"serve"``):
+        latency percentiles over measured scheduler steps, queue pressure,
+        interference charged to training, and the policy's actions.
+
+        Queue-delay percentiles here cover the WHOLE run (every finished
+        request) — the windowed ``ContinuousBatcher.stats()`` view is the
+        policy's signal, this is the report card."""
+        walls_ms = [1e3 * w for w in self._decode_walls]
+
+        def pct(q):
+            return float(np.percentile(walls_ms, q)) if walls_ms else 0.0
+
+        delays = [r.started_step - r.arrived_step
+                  for r in self.batcher.finished
+                  if r.started_step is not None]
+        stats = self.batcher.stats()
+        return {
+            "mode": self.serve_spec.mode,
+            "serve_slice": (self.serve_slice.start, self.serve_slice.length),
+            "shared_with": self.serve_slice.shared_with,
+            "reserve": self.reserve,
+            "requests_submitted": self.traffic.submitted,
+            "requests_finished": stats["finished"],
+            "requests_queued": stats["queued"],
+            "decode_steps": len(walls_ms),
+            "decode_step_ms": {"p50": pct(50), "p95": pct(95),
+                               "p99": pct(99)},
+            "queue_delay_steps": {
+                "mean": float(np.mean(delays)) if delays else 0.0,
+                "p95": (float(np.percentile(delays, 95))
+                        if delays else 0.0),
+            },
+            "charged_seconds": self._charged_seconds,
+            "policy_actions": list(self.policy_log),
+        }

@@ -54,6 +54,14 @@ Optional ``worker_dilation`` multiplies worker k's *measured* time by a
 constant factor — emulating a heterogeneous fleet (OmniLearn-style slow
 executors) on homogeneous host hardware so the closed loop can be exercised
 end-to-end.  The computation itself is always real.
+
+Co-located serving (DESIGN.md §13): ``reserve`` withholds the top devices
+of the data axis from training placement so a decode loop can own them
+(`repro.train.colocate.ColocatedMeshTrainer`); :meth:`set_reserve` resizes
+that region at runtime through the same replan path membership events use,
+and :meth:`_charge_interference` lets the co-located trainer fold measured
+decode seconds into a sharing worker's step time — decode interference
+then looks to the controller exactly like resource heterogeneity.
 """
 
 from __future__ import annotations
@@ -73,6 +81,7 @@ from repro.compat import shard_map
 from repro.core import (
     SlicePlan,
     bucket_up,
+    carve_serve,
     combine_weighted,
     largest_remainder_round,
     make_controller,
@@ -235,6 +244,7 @@ class MeshTrainer:
         worker_dilation: Optional[Sequence[float]] = None,
         dilation_for_spec: Optional[Callable[[WorkerSpec], float]] = None,
         concurrent: bool = True,
+        reserve: int = 0,
     ):
         if num_workers < 1:
             raise ValueError("need at least one worker")
@@ -243,10 +253,20 @@ class MeshTrainer:
         self._daxes = data_axes(mesh)
         if not self._daxes:
             raise ValueError(f"mesh {mesh.axis_names} has no data axis")
-        # full-axis ladder anchors (the fallback path's quanta); slices get
-        # their own per-worker quanta from the placement plan
+        # train-region ladder anchors (the fallback path's quanta); slices
+        # get their own per-worker quanta from the placement plan.  The top
+        # ``reserve`` devices of the data axis belong to a co-located serve
+        # slice (DESIGN.md §13) and never host training shards.
         self.data_extent = int(math.prod(mesh.shape[a] for a in self._daxes))
-        self.quantum = self.data_extent
+        if reserve < 0 or self.data_extent - reserve < 1:
+            raise ValueError(
+                f"reserving {reserve} of {self.data_extent} data-axis "
+                f"devices for serving would leave no training devices — "
+                f"training fully preempted; shrink the serve slice or "
+                f"time-multiplex it (serve mode 'shared')")
+        self.reserve = reserve
+        self.train_extent = self.data_extent - reserve
+        self.quantum = self.train_extent
         self.bucket_base = self.quantum * -(-cfg.microbatch // self.quantum)
         self.growth = growth
         self.time_alpha = time_alpha
@@ -363,16 +383,32 @@ class MeshTrainer:
         """
         old = list(self._exec)
         was_concurrent = self.concurrent
-        concurrent = self._want_concurrent and self.k <= self.data_extent
+        concurrent = self._want_concurrent and self.k <= self.train_extent
         if concurrent and plan is None:
             # equal device shares: the heterogeneity lives in the batch
-            # sizes, not the slice widths, so slices stay maximally stable
-            plan = plan_slices(self.data_extent, self.k)
+            # sizes, not the slice widths, so slices stay maximally stable.
+            # A live serve reserve routes through the placement layer's
+            # carve (DESIGN.md §13) so the dedicated-slice split has one
+            # source of truth.
+            if self.reserve:
+                plan, _ = carve_serve(self.data_extent, self.k,
+                                      self.reserve)
+            else:
+                plan = plan_slices(self.train_extent, self.k)
         self.concurrent = concurrent
         self.slice_plan = plan if concurrent else None
         if not concurrent:
-            shared = old[0] if (old and not was_concurrent) else \
-                self._make_exec(self.mesh, self._daxes, None)
+            # the fallback record is reusable only while the train region
+            # is unchanged (a serve-slice resize changes its quantum)
+            if old and not was_concurrent \
+                    and old[0].quantum == self.train_extent:
+                shared = old[0]
+            elif self.reserve == 0:
+                shared = self._make_exec(self.mesh, self._daxes, None)
+            else:
+                sub = self._flat_devices[:self.train_extent]
+                submesh = Mesh(sub, ("data",) + self._other_axes)
+                shared = self._make_exec(submesh, ("data",), None)
             new = [shared] * self.k
         else:
             by_slice = {rec.slice: rec for rec in old} if was_concurrent \
@@ -517,11 +553,29 @@ class MeshTrainer:
         awaiter thread per worker stamps that slice's completion the moment
         it lands.  Per-worker time = own completion − own dispatch; workers
         that compiled this round get a solo rerun for clean timing.
+
+        Split into :meth:`_dispatch_round` / :meth:`_collect_round` so the
+        co-located trainer (DESIGN.md §13) can run decode work on its
+        dedicated serve slice *while* the training calls are in flight.
         """
-        dispatches = [self._dispatch(k, self.batches[k])
-                      for k in range(self.k)]
-        stamps = list(self._await_pool().map(
-            _ready_timestamp, [d.out for d in dispatches]))
+        return self._collect_round(self._dispatch_round())
+
+    def _dispatch_round(self) -> list[_Dispatch]:
+        """Launch every worker's bucketed call without blocking."""
+        return [self._dispatch(k, self.batches[k]) for k in range(self.k)]
+
+    def _submit_awaiters(self, dispatches: list[_Dispatch]) -> list:
+        """Start one awaiter per in-flight worker NOW, so completions are
+        stamped the moment they land even if the main thread goes on to do
+        other work (the co-located trainer runs its decode loop here)."""
+        pool = self._await_pool()
+        return [pool.submit(_ready_timestamp, d.out) for d in dispatches]
+
+    def _collect_round(self, dispatches: list[_Dispatch], futures=None):
+        """Stamp per-slice completions; gather grads, losses, raw times."""
+        if futures is None:
+            futures = self._submit_awaiters(dispatches)
+        stamps = [f.result() for f in futures]
         # (dispatch, completion) per worker, for concurrency diagnostics:
         # max(dispatch) < min(completion) ⇔ all K calls were in flight at
         # once (benchmarks/backend_bench.py asserts this)
@@ -552,16 +606,29 @@ class MeshTrainer:
             raw_times.append(dt)
         return grads, losses, weights, raw_times
 
+    def _charge_interference(self, raw_times: list[float]) -> list[float]:
+        """Hook: the co-located trainer (DESIGN.md §13) adds measured decode
+        seconds to the worker whose devices the serve slice time-multiplexes,
+        so the controller, the engine clock, and the step records all see
+        the interference consistently.  Base trainer: no-op."""
+        return raw_times
+
     def bsp_step(self) -> StepRecord:
         if self.concurrent and self.k > 1:
             grads, losses, weights, raw_times = self._round_concurrent()
         else:
             grads, losses, weights, raw_times = self._round_sequential()
+        raw_times = self._charge_interference(raw_times)
         smoothed = [self._observe_time(k, t) for k, t in enumerate(raw_times)]
         for k, t in enumerate(raw_times):
             self.time_model.observe(k, self.batches[k], t)
         # Eq. 2-3: lambda-weighted combine (identical to the sim path)
         g = combine_weighted(grads, self.batches)
+        if self.reserve and not self.concurrent:
+            # fallback grads live on the train-region submesh (the serve
+            # reserve is excluded); rejoin the full mesh so params stay
+            # replicated everywhere across serve-slice resizes
+            g = jax.device_put(g, self._full_replicated)
         self.params, self.opt_state = self._opt_update(
             self.params, g, self.opt_state, jnp.asarray(self.step_idx))
         # the engine's barrier consumes the round's MEASURED times (same
@@ -617,7 +684,7 @@ class MeshTrainer:
         self.time_model.observe(i, self.batches[i], dt)
         lam = self.batches[i] / sum(self.batches)
         g = jax.tree_util.tree_map(lambda x: lam * self.k * x, g)
-        if self.concurrent:
+        if self.concurrent or self.reserve:
             g = jax.device_put(g, self._full_replicated)
         self.params, self.opt_state = self._opt_update(
             self.params, g, self.opt_state, jnp.asarray(self.step_idx))
@@ -705,11 +772,35 @@ class MeshTrainer:
             self.batches = self._measured_replan(total)
         self._reconfigure_execution(
             self.slice_plan.add() if (self.slice_plan is not None
-                                      and self.k <= self.data_extent)
+                                      and self.k <= self.train_extent)
             else None)
         # the newcomer reads the CURRENT params and, if an ASP schedule is
         # live, dispatches immediately (predicted via the rate-model mean)
         self.engine.add_worker(self.batches[-1], payload=self.params)
+
+    def set_reserve(self, n: int) -> None:
+        """Resize the reserved serve region at the top of the data axis.
+
+        The preemption policy's replan path (DESIGN.md §13): growing the
+        reserve makes training *yield* devices to the serve slice, shrinking
+        it returns freed capacity — in both directions worker slices replan
+        through :meth:`_reconfigure_execution` exactly like a membership
+        event, so controller and measurement state survive untouched and the
+        batch controller re-equalizes around the new device shares.
+        """
+        if n == self.reserve:
+            return
+        if n < 0 or self.data_extent - n < 1:
+            raise ValueError(
+                f"reserving {n} of {self.data_extent} data-axis devices "
+                f"would leave no training devices — training fully "
+                f"preempted; the serve slice may not take the whole axis")
+        self.reserve = n
+        self.train_extent = self.data_extent - n
+        self.quantum = self.train_extent
+        self.bucket_base = self.quantum * -(-self.cfg.microbatch
+                                            // self.quantum)
+        self._reconfigure_execution()
 
     # ------------------------------------------------------------ checkpoint
 
@@ -720,6 +811,7 @@ class MeshTrainer:
         here is JSON-serializable (the checkpoint metadata sidecar)."""
         return {
             "extent": self.data_extent,
+            "reserve": self.reserve,
             "concurrent": self.concurrent,
             "slices": ([list(s) for s in self.slice_plan.slices]
                        if self.slice_plan is not None else None),
@@ -740,6 +832,10 @@ class MeshTrainer:
                 f"checkpoint was taken on a mesh with data extent "
                 f"{st['extent']}, this mesh has {self.data_extent} — "
                 f"rebuild the Experiment on a matching mesh")
+        # the serve reserve may have been resized by the preemption policy
+        # since construction; restore it (and the train-region execution
+        # records) before reconstructing the slice plan against train_extent
+        self.set_reserve(int(st.get("reserve", 0)))
         slices = st["slices"]
         if bool(st["concurrent"]) != (slices is not None) or \
                 (slices is None) != (self.slice_plan is None):
@@ -749,7 +845,7 @@ class MeshTrainer:
                 "checkpoint payload?)")
         if slices is not None:
             plan = SlicePlan(
-                extent=self.data_extent, quantum=1,
+                extent=self.train_extent, quantum=1,
                 slices=tuple((int(a), int(b)) for a, b in slices))
             if plan.slices != self.slice_plan.slices:
                 self._reconfigure_execution(plan)

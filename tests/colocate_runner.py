@@ -1,0 +1,154 @@
+"""Subprocess helper: co-located serving on the 8-fake-device debug mesh
+(DESIGN.md §13).  Executed by test_colocate.py in a fresh interpreter so
+the XLA device-count flag can be set before jax initializes (the
+in-process tier-1 suite runs on ONE device, which exercises only the
+shared-mode fallback).
+
+Covers, on a real multi-device mesh: shared-mode serve slice tracking the
+last worker's slice with the decode charge landing on it; dedicated-mode
+placement (serve devices disjoint from every training shard); the SLO
+policy growing the slice under a traffic burst (training yields devices
+through the replan path) and returning the capacity once the queue
+drains; and the serve reserve surviving a checkpoint round-trip.
+"""
+
+import os
+import sys
+import tempfile
+
+os.environ["JAX_PLATFORMS"] = "cpu"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.api import (  # noqa: E402
+    ClusterSpec,
+    Experiment,
+    MeshBackend,
+    ServeSpec,
+    TrainConfig,
+    paper_workload,
+)
+from repro.launch.mesh import make_debug_mesh  # noqa: E402
+from repro.optim import sgd  # noqa: E402
+
+
+def experiment(mesh, serve, **cfg_kw):
+    cfg = dict(b0=16, microbatch=4, batching="dynamic",
+               init_allocation="uniform", max_steps=10, seed=0)
+    cfg.update(cfg_kw)
+    return Experiment(
+        workload=paper_workload("linreg"),
+        cluster=ClusterSpec.homogeneous(
+            30, 3, backend=MeshBackend(mesh=mesh), serve=serve),
+        optimizer=sgd(0.05),
+        config=TrainConfig(**cfg),
+    )
+
+
+def check_shared_concurrent(mesh) -> None:
+    """Shared mode with live slices: the serve slice IS the last worker's
+    slice, and the charge lands on that worker's recorded times."""
+    session = experiment(
+        mesh,
+        ServeSpec(mode="shared", requests_per_round=1.0, slots=2,
+                  decode_steps_per_round=2, prompt_len=2, max_new_tokens=3,
+                  cache_len=16),
+        max_steps=4).session()
+    trainer = session.trainer
+    assert trainer.concurrent and trainer.slice_plan is not None
+    sl = trainer.serve_slice
+    assert (sl.start, sl.length) == trainer.slice_plan.slices[-1]
+    assert sl.shared_with == trainer.k - 1
+    dev = trainer.batcher.device
+    assert dev in set(
+        trainer._flat_devices[sl.start].ravel().tolist()), \
+        "batcher must sit on the contended worker's slice"
+    out = session.run()
+    assert out["serve"]["charged_seconds"] > 0
+    total = sum(r.worker_times[sl.shared_with] for r in out["history"])
+    assert total >= out["serve"]["charged_seconds"]
+
+
+def check_dedicated_policy(mesh) -> None:
+    """Overload -> SLO grow (training yields devices, slices replan over
+    the narrower train region); drained queue -> capacity returned."""
+    serve = ServeSpec(mode="dedicated", devices=1, slots=1,
+                      requests_per_round=3.0, decode_steps_per_round=1,
+                      prompt_len=2, max_new_tokens=4, cache_len=16,
+                      slo_queue_delay=0.5, check_every=1, idle_patience=1)
+    session = experiment(mesh, serve, max_steps=30).session()
+    trainer = session.trainer
+    assert trainer.reserve == 1 and trainer.train_extent == 3
+    # dedicated: no training shard may touch the reserved devices
+    reserved = set(trainer._flat_devices[trainer.train_extent:].ravel()
+                   .tolist())
+    for rec in trainer._exec:
+        assert not (set(rec.mesh.devices.ravel().tolist()) & reserved)
+    assert trainer.batcher.device in reserved
+
+    grew = False
+    for i, _rec in enumerate(session):
+        if trainer.reserve > 1:
+            grew = True
+            # replanned train slices tile the (narrower) train region and
+            # still avoid the (wider) serve reserve
+            reserved = set(
+                trainer._flat_devices[trainer.train_extent:].ravel()
+                .tolist())
+            for rec in trainer._exec:
+                assert not (set(rec.mesh.devices.ravel().tolist())
+                            & reserved)
+            if trainer.slice_plan is not None:
+                assert trainer.slice_plan.extent == trainer.train_extent
+            # stop the burst so the policy gives the devices back
+            trainer.traffic.rate = 0.0
+    assert grew, "overload never made training yield a device"
+    assert trainer.reserve == 1, (
+        f"freed capacity not returned: reserve ended at {trainer.reserve} "
+        f"(policy log: {trainer.policy_log})")
+    kinds = [a for _, a, _ in trainer.policy_log]
+    assert "grow" in kinds and "shrink" in kinds, trainer.policy_log
+
+
+def check_checkpoint_reserve(mesh) -> None:
+    """A grown serve reserve survives save -> restore bit-for-bit."""
+    serve = ServeSpec(mode="dedicated", devices=1, slots=1,
+                      requests_per_round=0.0, decode_steps_per_round=1,
+                      prompt_len=2, max_new_tokens=3, cache_len=16)
+    s1 = experiment(mesh, serve, max_steps=8).session()
+    for i, _rec in enumerate(s1):
+        if i == 2:
+            s1.trainer.set_reserve(2)       # as the policy would
+        if i >= 4:
+            break
+    assert s1.trainer.reserve == 2
+    path = os.path.join(tempfile.mkdtemp(), "colo-ckpt")
+    s1.save(path)
+
+    s2 = experiment(mesh, serve, max_steps=8).session()
+    assert s2.trainer.reserve == 1          # fresh build = spec baseline
+    s2.restore(path)
+    t1, t2 = s1.trainer, s2.trainer
+    assert t2.reserve == 2 and t2.train_extent == t1.train_extent
+    assert t2.exec_state_dict() == t1.exec_state_dict()
+    assert (t2.serve_slice.start, t2.serve_slice.length) == \
+        (t1.serve_slice.start, t1.serve_slice.length)
+    out = s2.run()
+    assert out["steps"] == 8
+
+
+def main() -> int:
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = make_debug_mesh(8)
+    check_shared_concurrent(mesh)
+    check_dedicated_policy(mesh)
+    check_checkpoint_reserve(mesh)
+    print("colocate_runner: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

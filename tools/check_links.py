@@ -1,9 +1,18 @@
-"""Fail on broken intra-repo markdown links (CI lint step).
+"""Fail on broken intra-repo markdown links and stale DESIGN.md § anchors.
 
-Scans every tracked ``*.md`` file for ``[text](target)`` links and verifies
-that relative targets resolve to an existing file or directory (anchors are
-stripped; external ``http(s)://`` / ``mailto:`` targets and pure in-page
-``#anchor`` links are skipped).  Exit code 1 lists every broken link.
+Two lint passes (CI docs-lint step):
+
+  * every ``*.md`` file: ``[text](target)`` links must resolve to an
+    existing file or directory (anchors stripped; external
+    ``http(s)://`` / ``mailto:`` targets and pure in-page ``#anchor``
+    links are skipped);
+  * every ``*.md`` AND ``*.py`` file: citations of the form
+    ``DESIGN.md §N`` (docstrings cite design sections this way, including
+    ranges like ``DESIGN.md §11-§12``) must name a section heading that
+    actually exists in DESIGN.md — so a renumbering or a deleted section
+    fails the build instead of silently orphaning the cross-references.
+
+Exit code 1 lists every broken link/citation.
 
     python tools/check_links.py [root]
 """
@@ -16,16 +25,49 @@ import sys
 
 # [text](target) — target without spaces/closing paren; images share the form
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# "DESIGN.md §N" or "DESIGN.md §N-§M" (possibly wrapped across a docstring
+# line break between the filename and the section mark)
+_DESIGN_REF = re.compile(r"DESIGN\.md\s+§(\d+)(?:\s*-\s*§(\d+))?")
+_SECTION_HEADING = re.compile(r"^##\s+§(\d+)\b", re.M)
 _SKIP_PREFIXES = ("http://", "https://", "mailto:", "ftp://")
 _SKIP_DIRS = {".git", ".github", "__pycache__", ".pytest_cache", "node_modules"}
 
 
-def md_files(root: str):
+def lint_files(root: str, suffixes: tuple[str, ...]):
     for dirpath, dirnames, filenames in os.walk(root):
         dirnames[:] = [d for d in dirnames if d not in _SKIP_DIRS]
         for name in filenames:
-            if name.endswith(".md"):
+            if name.endswith(suffixes):
                 yield os.path.join(dirpath, name)
+
+
+def md_files(root: str):
+    yield from lint_files(root, (".md",))
+
+
+def design_sections(root: str) -> set[int]:
+    """Section numbers with a ``## §N`` heading in DESIGN.md."""
+    path = os.path.join(root, "DESIGN.md")
+    if not os.path.exists(path):
+        return set()
+    with open(path, encoding="utf-8") as f:
+        return {int(n) for n in _SECTION_HEADING.findall(f.read())}
+
+
+def broken_design_refs(path: str, sections: set[int]) -> list[tuple[int, str]]:
+    """(line, citation) pairs whose ``DESIGN.md §N`` target doesn't exist."""
+    bad = []
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    for m in _DESIGN_REF.finditer(text):
+        cited = {int(m.group(1))}
+        if m.group(2):
+            cited.add(int(m.group(2)))
+        missing = sorted(cited - sections)
+        if missing:
+            lineno = text.count("\n", 0, m.start()) + 1
+            bad.append((lineno, m.group(0).replace("\n", " ")))
+    return bad
 
 
 def broken_links(path: str, root: str) -> list[tuple[int, str]]:
@@ -57,8 +99,19 @@ def main() -> int:
             failures += 1
             print(f"{os.path.relpath(path, root)}:{lineno}: "
                   f"broken link -> {target}")
-    print(f"checked {checked} markdown files: "
-          f"{failures} broken intra-repo link(s)")
+    sections = design_sections(root)
+    ref_files = 0
+    for path in sorted(lint_files(root, (".md", ".py"))):
+        ref_files += 1
+        for lineno, ref in broken_design_refs(path, sections):
+            failures += 1
+            detail = (f"(DESIGN.md defines §1-§{max(sections)})"
+                      if sections else "(no DESIGN.md found)")
+            print(f"{os.path.relpath(path, root)}:{lineno}: "
+                  f"stale design citation -> {ref} {detail}")
+    print(f"checked links in {checked} markdown files and DESIGN.md § "
+          f"citations in {ref_files} md/py files: {failures} broken "
+          f"link(s)/citation(s)")
     return 1 if failures else 0
 
 
