@@ -1,0 +1,56 @@
+"""Per-PR perf-trajectory artifacts (``BENCH_<pr>.json`` at the repo root).
+
+Each PR that changes the measured path writes one JSON artifact with its
+headline numbers (step-time medians, recompile counts, padding overhead),
+committed at the repo root and re-produced by CI on every push — a
+trajectory of perf over the PR stack that a regression can be read off by
+diffing two files (benchmarks/README.md).
+
+The file is a flat object of named sections; benchmark drivers each own a
+section and merge into the file (so ``backend_bench.py`` and
+``kernel_bench.py`` can both contribute to the same artifact without
+clobbering each other).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import platform
+from typing import Optional
+
+
+def update_bench_json(path: str, section: str, payload: dict,
+                      meta: Optional[dict] = None) -> dict:
+    """Merge ``payload`` under ``section`` into the artifact at ``path``.
+
+    Reads the existing file if present (other sections are preserved),
+    stamps a ``meta`` header (host/python context so numbers from different
+    machines aren't naively compared), writes atomically, returns the full
+    artifact dict.
+    """
+    data: dict = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data["meta"] = {
+        "artifact": os.path.splitext(os.path.basename(path))[0],
+        "platform": platform.machine(),
+        "python": platform.python_version(),
+        **(meta or data.get("meta", {}) or {}),
+    }
+    data[section] = payload
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    return data
+
+
+def rows_to_payload(rows: list) -> dict:
+    """``(name, value, derived)`` CSV rows -> a JSON-friendly dict keyed by
+    row name (the same rows the drivers print, so CSV and artifact always
+    agree)."""
+    return {name: {"value": float(value), "derived": str(derived)}
+            for name, value, derived in rows}

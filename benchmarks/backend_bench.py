@@ -42,6 +42,15 @@ sys.path.insert(0, _ROOT)
 
 _COUNT_FLAG = "--xla_force_host_platform_device_count"
 
+# every CSV row also lands here so --emit-json can merge the run into the
+# per-PR perf-trajectory artifact (benchmarks/artifact.py)
+_ROWS: list = []
+
+
+def _emit(name, value, derived) -> None:
+    _ROWS.append((name, float(value), derived))
+    print(f"{name},{float(value):.4g},{derived}")
+
 
 def _force_cpu_devices(n: int) -> None:
     """Fake-device flags must land in XLA_FLAGS BEFORE jax initializes."""
@@ -97,6 +106,14 @@ def _rows_for(name: str, session, out, growth: float, sync: str) -> list:
                      f"ladder_bound={bound} buckets={per_worker}"))
         rows.append((f"backend/{name}/timing_reruns", trainer.timing_reruns,
                      "compile-time exclusions"))
+        batches = [int(b) for b in out["final_batches"]]
+        fetched = [trainer.bucket_for(w, n) for w, n in enumerate(batches)]
+        over = (sum(fetched) - sum(batches)) / max(sum(fetched), 1)
+        rows.append((f"backend/{name}/padding_overhead", over,
+                     f"fraction of fetched rows that are ladder padding at "
+                     f"the final allocation: buckets={fetched} "
+                     f"batches={batches} (the rows the ragged kernel "
+                     f"grid-skips — DESIGN.md §14)"))
         if trainer.slice_plan is not None:
             rows.append((f"backend/{name}/slice_widths",
                          len(trainer.slice_plan.slices),
@@ -152,7 +169,7 @@ def run_compare(args, mesh) -> None:
         allocations[backend.name] = out["final_batches"]
         for row_name, value, derived in _rows_for(backend.name, session, out,
                                                   args.growth, args.sync):
-            print(f"{row_name},{float(value):.4g},{derived}")
+            _emit(row_name, value, derived)
 
     # how close do the two closed loops land? L1 distance between the
     # normalized final allocations (0 = identical shares)
@@ -160,8 +177,7 @@ def run_compare(args, mesh) -> None:
     if len(sim_b) == len(mesh_b):
         s, m = sum(sim_b), sum(mesh_b)
         l1 = sum(abs(a / s - b / m) for a, b in zip(sim_b, mesh_b))
-        print(f"backend/allocation_l1,{l1:.4g},"
-              f"sim={sim_b} mesh={mesh_b}")
+        _emit("backend/allocation_l1", l1, f"sim={sim_b} mesh={mesh_b}")
 
     if args.sync != "bsp" or args.timing_rounds <= 0:
         return
@@ -196,7 +212,7 @@ def run_compare(args, mesh) -> None:
     last_dispatch = max(t0 for t0, _ in stamps)
     first_done = min(done for _, done in stamps)
     in_flight_all = last_dispatch < first_done
-    print(f"backend/mesh/concurrent_in_flight,{float(in_flight_all):.4g},"
+    _emit("backend/mesh/concurrent_in_flight", float(in_flight_all),
           f"last_dispatch={last_dispatch - stamps[0][0]:.2e}s "
           f"first_completion={first_done - stamps[0][0]:.2e}s after round "
           f"start")
@@ -221,7 +237,7 @@ def run_compare(args, mesh) -> None:
         f"round window ({window:.4f}s) should be well under the sum of "
         f"per-slice intervals ({interval_sum:.4f}s): sequential dispatch "
         f"would make them equal (sum-of-workers)")
-    print(f"backend/mesh/round_window_over_interval_sum,{ratio_ws:.4g},"
+    _emit("backend/mesh/round_window_over_interval_sum", ratio_ws,
           f"in-flight window / Σ per-slice intervals; sequential dispatch "
           f"= ~1, perfect overlap = 1/k (k={trainer.k})")
 
@@ -230,11 +246,11 @@ def run_compare(args, mesh) -> None:
     # devices sharing few host cores the two modes converge instead, so
     # this row is reported but not asserted.
     ratio = con / max(seq, 1e-12)
-    print(f"backend/mesh/round_wall_sequential,{seq:.4g},"
-          f"median steady-state round, time-multiplexed full axis")
-    print(f"backend/mesh/round_wall_concurrent,{con:.4g},"
-          f"median steady-state round, disjoint slices in flight")
-    print(f"backend/mesh/dispatch_concurrency_ratio,{ratio:.4g},"
+    _emit("backend/mesh/round_wall_sequential", seq,
+          "median steady-state round, time-multiplexed full axis")
+    _emit("backend/mesh/round_wall_concurrent", con,
+          "median steady-state round, disjoint slices in flight")
+    _emit("backend/mesh/dispatch_concurrency_ratio", ratio,
           f"concurrent/sequential wall (host-core bound on the debug mesh; "
           f"<1 on genuinely disjoint hardware)")
 
@@ -283,14 +299,14 @@ def run_resume(args, mesh) -> None:
     resumed.restore(path)
     assert state(resumed) == state(first), \
         "restored controller/measurement state is not bit-identical"
-    print(f"resume/state_bit_identical,1,"
+    _emit("resume/state_bit_identical", 1,
           f"controller+EWMA+rates+ladder after restore at step {args.steps}")
     out = resumed.run()
     assert out["steps"] == 2 * args.steps
-    print(f"resume/continued_steps,{out['steps'] - args.steps},"
+    _emit("resume/continued_steps", out["steps"] - args.steps,
           f"steps trained after restore (of {args.steps} expected)")
-    print(f"resume/final_loss,{out['final_loss']:.4g},"
-          f"finite loss after resumed training")
+    _emit("resume/final_loss", out["final_loss"],
+          "finite loss after resumed training")
 
 
 def main() -> None:
@@ -313,6 +329,10 @@ def main() -> None:
     ap.add_argument("--timing-rounds", type=int, default=8,
                     help="rounds for the concurrent-vs-sequential dispatch "
                          "A/B (0 disables; BSP compare mode only)")
+    ap.add_argument("--emit-json", default=None,
+                    help="merge this run's rows (step medians, recompiles, "
+                         "padding overhead) into the per-PR perf-trajectory "
+                         "artifact, e.g. BENCH_6.json (benchmarks/artifact.py)")
     args = ap.parse_args()
 
     _force_cpu_devices(args.devices)
@@ -325,6 +345,17 @@ def main() -> None:
         run_compare(args, mesh)
     else:
         run_resume(args, mesh)
+    if args.emit_json:
+        import jax
+
+        from benchmarks.artifact import rows_to_payload, update_bench_json
+
+        update_bench_json(
+            args.emit_json, f"backend_bench/{args.mode}_{args.sync}", {
+                "steps": args.steps,
+                "rows": rows_to_payload(_ROWS),
+            },
+            meta={"jax": jax.__version__, "devices": args.devices})
 
 
 if __name__ == "__main__":

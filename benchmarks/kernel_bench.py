@@ -1,0 +1,377 @@
+"""Ragged Pallas flash-attention vs masked reference on the hot path.
+
+Sweeps the bucket ladder (DESIGN.md §11) with the ragged kernel
+(DESIGN.md §14) against the masked jnp reference, on the same CPU debug
+mesh the backend benchmarks use:
+
+  * **grad exactness** — on EVERY ladder rung, for ``num_valid`` in
+    {0, rung/2, rung}, kernel-path gradients (Pallas forward + Pallas
+    backward) must match the masked ``attention_ref`` gradients (fp32
+    allclose), and one compiled executable must serve all valid counts
+    (``num_valid`` is a traced operand, never a shape).
+  * **step-time ladder sweep** — fwd+bwd step-time medians, kernel vs
+    reference, per rung.
+  * **padding skip** — the acceptance criterion: a bucket at half
+    occupancy (``num_valid = b_max/2``) must cost within 15% of the
+    half-size bucket, while the masked reference pays for every padded
+    row (~2x).  Measured ratios are checked against the roofline
+    compute-term prediction (time proportional to useful FLOPs, which are
+    proportional to valid rows — ``launch/roofline.py``).
+  * **debug-mesh wiring** — the SAME uniform-batching lm Experiment run
+    through ``MeshBackend`` with ``lm_workload(use_kernel=True)`` vs
+    ``False``; final losses must agree (the trainer's suffix-padding mask
+    and the kernel's ``num_valid`` are one source of truth).
+
+Prints ``name,value,derived`` CSV (``--csv`` also writes it to a file) and
+merges a ``kernel_bench`` section into the per-PR perf-trajectory artifact
+(``--emit-json``, default ``BENCH_6.json`` at the repo root — see
+``benchmarks/artifact.py``).  Timing assertions arm at ``--steps >= 30``
+(medians need steady state); CI smokes with ``--steps 3``.
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py [--steps 30]
+
+CPU note: Pallas runs in interpret mode here (``jax.default_backend() ==
+"cpu"``), where ``ragged_impl="auto"`` selects the rowloop lowering — the
+batch-grid axis as a ``fori_loop`` with a traced trip count, semantically
+the TPU kernel's sequential batch axis (kernels/flash_attention/kernel.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import statistics
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+from benchmarks.artifact import rows_to_payload, update_bench_json
+
+_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def _force_cpu_devices(n: int) -> None:
+    """Fake-device flags must land in XLA_FLAGS BEFORE jax initializes."""
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _COUNT_FLAG not in flags:
+        os.environ["XLA_FLAGS"] = f"{_COUNT_FLAG}={n} {flags}".strip()
+
+
+# ------------------------------------------------------------ step harness
+
+
+def _step_fn(use_kernel: bool):
+    """Jitted fwd+bwd attention step: weighted-sum loss, grads wrt q/k/v.
+
+    ``num_valid`` rides along as a traced operand, so every valid count in
+    a bucket hits the same executable (asserted below).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_attention.ops import attention
+
+    def loss(q, k, v, nv, w):
+        out = attention(q, k, v, num_valid=nv, use_kernel=use_kernel,
+                        interpret=True)
+        return (out.astype(jnp.float32) * w).sum()
+
+    return jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2)))
+
+
+def _data(key, b, s, h, hkv, d):
+    import jax
+    import jax.numpy as jnp
+
+    kq, kk, kv, kw = jax.random.split(key, 4)
+    return (jax.random.normal(kq, (b, s, h, d), jnp.float32),
+            jax.random.normal(kk, (b, s, hkv, d), jnp.float32),
+            jax.random.normal(kv, (b, s, hkv, d), jnp.float32),
+            jax.random.normal(kw, (b, s, h, d), jnp.float32))
+
+
+def _median_ms(fn, fargs, steps: int) -> float:
+    import jax
+
+    jax.block_until_ready(fn(*fargs))  # compile outside the timed region
+    walls = []
+    for _ in range(max(steps, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*fargs))
+        walls.append((time.perf_counter() - t0) * 1e3)
+    return statistics.median(walls)
+
+
+def _max_abs_err(ga, gb) -> tuple[float, float]:
+    """(max |ga - gb|, max |gb|) over two (dq, dk, dv) triples."""
+    import jax.numpy as jnp
+
+    err = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                    - b.astype(jnp.float32))))
+              for a, b in zip(ga, gb))
+    scale = max(float(jnp.max(jnp.abs(b))) for b in gb)
+    return err, scale
+
+
+# ------------------------------------------------------------------ sweeps
+
+
+def run_ladder(args) -> tuple[list, dict]:
+    """Grad exactness on every rung + step-time medians kernel vs ref.
+
+    Returns (rows, cache) where cache holds the compiled step fns and data
+    for the top rung, reused by the padding-skip section (the kernel's
+    traced ``num_valid`` means half-occupancy needs no new executable).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import bucket_ladder
+
+    rungs = bucket_ladder(args.b_max, base=1, growth=args.growth, quantum=1)
+    key = jax.random.PRNGKey(args.seed)
+    kfn, rfn = _step_fn(True), _step_fn(False)
+
+    rows = []
+    cache = {}
+    for b in rungs:
+        q, k, v, w = _data(jax.random.fold_in(key, b), b, args.seq,
+                           args.heads, args.kv_heads, args.head_dim)
+        for nv in sorted({0, b // 2, b}):
+            nv_ = jnp.int32(nv)
+            lk, gk = kfn(q, k, v, nv_, w)
+            lr, gr = rfn(q, k, v, nv_, w)
+            err, scale = _max_abs_err(gk, gr)
+            ok = all(
+                jnp.allclose(a.astype(jnp.float32), c.astype(jnp.float32),
+                             atol=5e-4, rtol=5e-3)
+                for a, c in zip(gk, gr)) and jnp.allclose(
+                    lk, lr, atol=5e-3, rtol=5e-4)
+            rows.append((f"kernel/grad/b{b}/nv{nv}/max_abs_err", err,
+                         f"vs masked ref; grad_scale={scale:.3g} "
+                         f"loss={float(lk):.6g} ref={float(lr):.6g}"))
+            assert ok, (
+                f"kernel-path gradients diverged from the masked reference "
+                f"at bucket {b}, num_valid {nv}: max_abs_err={err:.3g} "
+                f"(grad scale {scale:.3g})")
+        n_exec = kfn._cache_size()
+        rows.append((f"kernel/bucket{b}/executables", n_exec,
+                     "one executable serves every valid count in the bucket"))
+        assert n_exec == len(rungs[:rungs.index(b) + 1]), (
+            f"num_valid must be traced, not a shape: bucket {b} has "
+            f"{n_exec} executables after {rungs.index(b) + 1} rungs")
+
+        nv_full = jnp.int32(b)
+        t_k = _median_ms(kfn, (q, k, v, nv_full, w), args.steps)
+        t_r = _median_ms(rfn, (q, k, v, nv_full, w), args.steps)
+        rows.append((f"kernel/bucket{b}/step_ms", t_k,
+                     f"fwd+bwd median of {args.steps}, num_valid={b} (full)"))
+        rows.append((f"ref/bucket{b}/step_ms", t_r,
+                     f"kernel/ref={t_k / max(t_r, 1e-9):.3g} (interpret-mode "
+                     f"kernel vs XLA-fused jnp on CPU — see DESIGN.md §14)"))
+        cache[b] = (q, k, v, w)
+    cache["fns"] = (kfn, rfn)
+    cache["rungs"] = rungs
+    return rows, cache
+
+
+def run_padding_skip(args, cache) -> list:
+    """The acceptance measurement: half-occupied bucket vs half-size bucket.
+
+    Kernel: rows past ``num_valid`` are skipped by the grid, so the ratio
+    must sit within 15% of 1.0 (the roofline compute-term prediction —
+    useful FLOPs are proportional to valid rows).  Masked reference:
+    computes every padded row then zeros it, predicting ~2.0.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.roofline import PEAK_FLOPS
+
+    B = args.b_max if args.b_max % 2 == 0 else args.b_max - 1
+    half = B // 2
+    kfn, rfn = cache["fns"]
+    if B in cache:
+        qB, kB, vB, wB = cache[B]
+    else:
+        qB, kB, vB, wB = _data(jax.random.PRNGKey(args.seed + 1), B,
+                               args.seq, args.heads, args.kv_heads,
+                               args.head_dim)
+    qh, kh, vh, wh = _data(jax.random.PRNGKey(args.seed + 2), half,
+                           args.seq, args.heads, args.kv_heads,
+                           args.head_dim)
+    nv = jnp.int32(half)
+
+    t_k_pad = _median_ms(kfn, (qB, kB, vB, nv, wB), args.steps)
+    t_k_half = _median_ms(kfn, (qh, kh, vh, nv, wh), args.steps)
+    t_r_pad = _median_ms(rfn, (qB, kB, vB, nv, wB), args.steps)
+    t_r_half = _median_ms(rfn, (qh, kh, vh, nv, wh), args.steps)
+    r_kernel = t_k_pad / max(t_k_half, 1e-9)
+    r_ref = t_r_pad / max(t_r_half, 1e-9)
+
+    # roofline compute-term prediction: attention matmul FLOPs scale with
+    # valid rows, so grid-skip predicts 1.0 and mask-only predicts B/(B/2)
+    flops_fwd = 4.0 * half * args.heads * args.seq * args.seq \
+        * args.head_dim * 0.5  # QK^T + PV, causal halves the visible tiles
+    flops_step = 3.5 * flops_fwd  # + backward (recompute + 5 matmuls)
+    armed = args.steps >= 30
+
+    rows = [
+        (f"kernel/pad_skip/half_valid_ms", t_k_pad,
+         f"bucket {B}, num_valid={half} — padded rows grid-skipped"),
+        (f"kernel/pad_skip/half_size_ms", t_k_half,
+         f"bucket {half}, num_valid={half} — the work actually needed"),
+        (f"kernel/pad_skip/ratio", r_kernel,
+         f"half-valid/half-size; acceptance <= 1.15 "
+         + ("(asserted)" if armed
+            else f"(informational at --steps {args.steps})")),
+        (f"ref/pad_skip/padded_ms", t_r_pad,
+         f"bucket {B} masked to {half} rows — every padded row computed"),
+        (f"ref/pad_skip/half_size_ms", t_r_half, f"bucket {half}"),
+        (f"ref/pad_skip/ratio", r_ref,
+         f"mask-only pays for padding; roofline predicts {B / half:.1f}"),
+        (f"roofline/kernel_pad_ratio_pred", 1.0,
+         f"measured={r_kernel:.3g}; useful-FLOPs proportionality "
+         f"(launch/roofline.py compute term)"),
+        (f"roofline/ref_pad_ratio_pred", float(B) / half,
+         f"measured={r_ref:.3g}"),
+        (f"roofline/attn_step_flops", flops_step,
+         f"half-size bucket fwd+bwd matmul FLOPs (estimate); v5e compute "
+         f"term {flops_step / PEAK_FLOPS * 1e3:.4g} ms at "
+         f"{PEAK_FLOPS / 1e12:.0f} TFLOP/s"),
+    ]
+    if armed:
+        assert abs(r_kernel - 1.0) <= 0.15, (
+            f"padding-skip regressed: half-valid bucket {B} cost "
+            f"{r_kernel:.3f}x the half-size bucket (acceptance: within "
+            f"15%); padded rows are costing kernel FLOPs")
+        assert r_ref >= 1.5, (
+            f"reference baseline suspicious: masked bucket {B} only "
+            f"{r_ref:.3f}x its half-size bucket — the comparison baseline "
+            f"should pay ~2x for padding")
+    return rows
+
+
+def run_mesh(args, mesh) -> list:
+    """End-to-end wiring on the debug mesh: lm Experiment, kernel vs ref.
+
+    Uniform batching pins shapes and batches, so the two runs consume
+    identical data and must land on the same loss — the trainer's
+    suffix-padding mask and the kernel's ``num_valid`` are one source of
+    truth (train/mesh.py, DESIGN.md §14).  b0=6 buckets up to 7, so every
+    worker step carries a real padded row through the kernel.
+    """
+    from repro.api import (ClusterSpec, Experiment, MeshBackend, TrainConfig,
+                           lm_workload)
+    from repro.configs import get_config
+    from repro.data import DataPipeline
+    from repro.models import reduced
+    from repro.optim import adam
+
+    rows, outs = [], {}
+    for use_kernel in (False, True):
+        cfg = reduced(get_config("gemma-2b"))
+        pipe = DataPipeline(cfg, seq_len=128, num_workers=3, seed=args.seed)
+        exp = Experiment(
+            workload=lm_workload(cfg, pipe, use_kernel=use_kernel),
+            cluster=ClusterSpec.hlevel(
+                39, args.hlevel, 3, workload="transformer", seed=args.seed,
+                backend=MeshBackend(mesh=mesh, dilation="from-spec",
+                                    growth=args.growth)),
+            optimizer=adam(1e-3),
+            config=TrainConfig(b0=6, microbatch=6, batching="uniform",
+                               max_steps=args.mesh_steps, seed=args.seed),
+        )
+        session = exp.session()
+        out = session.run()
+        name = "kernel" if use_kernel else "ref"
+        outs[name] = out
+        rows.append((f"mesh/{name}/final_loss", out["final_loss"],
+                     f"{out['steps']} uniform BSP steps, b0=6 -> bucket 7 "
+                     f"(1 padded row per worker)"))
+        rows.append((f"mesh/{name}/recompiles",
+                     session.trainer.accum_traces,
+                     f"jitted_calls={session.trainer.accum_calls}"))
+        rows.append((f"mesh/{name}/wall_per_step",
+                     out["wall_time"] / max(out["steps"], 1),
+                     "debug-mesh wall seconds per BSP round"))
+    rel = (abs(outs["kernel"]["final_loss"] - outs["ref"]["final_loss"])
+           / max(abs(outs["ref"]["final_loss"]), 1e-9))
+    rows.append(("mesh/loss_rel_err", rel,
+                 "kernel vs reference workload after identical uniform "
+                 "steps (asserted < 1e-3)"))
+    assert rel < 1e-3, (
+        f"lm_workload(use_kernel=True) diverged from the reference path on "
+        f"the mesh: final losses {outs['kernel']['final_loss']} vs "
+        f"{outs['ref']['final_loss']}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--steps", type=int, default=30,
+                    help="timed reps per point; timing assertions arm at "
+                         ">= 30 (CI smokes with 3)")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="fake CPU devices for the debug mesh")
+    ap.add_argument("--seq", type=int, default=128,
+                    help="sequence length (must be a multiple of 128)")
+    ap.add_argument("--heads", type=int, default=4)
+    ap.add_argument("--kv-heads", type=int, default=2)
+    ap.add_argument("--head-dim", type=int, default=64,
+                    help="64 exercises the lane-padding path (< 128 lanes)")
+    ap.add_argument("--b-max", type=int, default=16,
+                    help="top of the bucket ladder swept")
+    ap.add_argument("--growth", type=float, default=1.25)
+    ap.add_argument("--hlevel", type=float, default=6.0,
+                    help="cluster heterogeneity for the mesh wiring check")
+    ap.add_argument("--mesh-steps", type=int, default=3,
+                    help="training steps for the debug-mesh wiring check")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--csv", default=None,
+                    help="also write the CSV rows to this file")
+    ap.add_argument("--emit-json",
+                    default=os.path.join(_ROOT, "BENCH_6.json"),
+                    help="perf-trajectory artifact to merge the "
+                         "kernel_bench section into ('' disables)")
+    args = ap.parse_args()
+
+    _force_cpu_devices(args.devices)
+
+    import jax
+
+    from repro.launch.mesh import make_debug_mesh
+
+    rows = [("kernel/config/geometry", args.b_max,
+             f"b_max x seq {args.seq} x heads {args.heads}/{args.kv_heads} "
+             f"x head_dim {args.head_dim}, growth {args.growth}, "
+             f"steps {args.steps}")]
+    ladder_rows, cache = run_ladder(args)
+    rows += ladder_rows
+    rows += run_padding_skip(args, cache)
+    rows += run_mesh(args, make_debug_mesh(args.devices))
+
+    print("name,value,derived")
+    lines = [f"{name},{float(value):.4g},{derived}"
+             for name, value, derived in rows]
+    print("\n".join(lines))
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write("name,value,derived\n" + "\n".join(lines) + "\n")
+    if args.emit_json:
+        update_bench_json(
+            args.emit_json, "kernel_bench", {
+                "steps": args.steps,
+                "timing_asserts_armed": args.steps >= 30,
+                "rows": rows_to_payload(rows),
+            },
+            meta={"jax": jax.__version__, "backend": jax.default_backend(),
+                  "devices": args.devices})
+
+
+if __name__ == "__main__":
+    main()

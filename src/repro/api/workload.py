@@ -163,16 +163,28 @@ def paper_workload(name: str, *, seed: int = 100) -> Workload:
                              seed=seed)
 
 
-def lm_workload(model_cfg, pipe, *, aux_weight: float = 0.0) -> Workload:
+def lm_workload(model_cfg, pipe, *, aux_weight: float = 0.0,
+                use_kernel: bool = False) -> Workload:
     """Transformer-LM training from a model config + ``DataPipeline``.
 
     Handles both decoder-only and encoder-decoder families, optional
     modality prefixes, and an optional auxiliary-loss term weighted by
     ``aux_weight`` (e.g. MoE balance loss; scaled by the weight sum so it
     stays commensurate with the SUM-convention main loss).
+
+    ``use_kernel=True`` routes attention through the ragged Pallas kernel
+    (``use_pallas``) and derives the kernel's ``num_valid`` from the very
+    mask the trainer built when it padded the batch up the bucket ladder —
+    one source of truth, so rows the loss masks out are exactly the rows
+    the kernel grid skips (DESIGN.md §14).  Correct because the trainer's
+    fetch contract pads as a *suffix* (valid rows form a prefix; this also
+    holds shard-locally — a global prefix restricted to any contiguous
+    data-shard chunk is still a prefix, see train/mesh.py).
     """
     from repro.models import encdec_loss, init_encdec, init_lm, lm_loss
 
+    if use_kernel and model_cfg.family != "encdec":
+        model_cfg = model_cfg.with_(use_pallas=True)
     init = init_encdec if model_cfg.family == "encdec" else init_lm
 
     def loss_and_grad(params, batch, mask):
@@ -182,9 +194,14 @@ def lm_workload(model_cfg, pipe, *, aux_weight: float = 0.0) -> Workload:
                                           batch["tokens"], batch["targets"],
                                           mask)
             else:
+                num_valid = None
+                if use_kernel:
+                    row_w = mask if mask.ndim == 1 else mask.max(axis=-1)
+                    num_valid = (row_w > 0).sum().astype(jnp.int32)
                 ls, ws, aux = lm_loss(p, model_cfg, batch["tokens"],
                                       batch["targets"], mask,
-                                      prefix_embeds=batch.get("prefix"))
+                                      prefix_embeds=batch.get("prefix"),
+                                      num_valid=num_valid)
             # the aux term is differentiated but reported separately: the
             # metas carry the plain SUM loss
             total = (ls + aux_weight * aux * jnp.maximum(ws, 1.0)

@@ -1,5 +1,7 @@
-from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.kernel import (flash_attention,
+                                                 flash_attention_bwd)
 from repro.kernels.flash_attention.ops import attention
 from repro.kernels.flash_attention.ref import attention_ref
 
-__all__ = ["attention", "attention_ref", "flash_attention"]
+__all__ = ["attention", "attention_ref", "flash_attention",
+           "flash_attention_bwd"]

@@ -1,19 +1,45 @@
-"""Flash attention as a Pallas TPU kernel.
+"""Flash attention as a Pallas TPU kernel — ragged forward + backward.
 
-TPU-native design (DESIGN.md hardware-adaptation notes):
+TPU-native design (DESIGN.md §14):
   * grid (batch, q_heads, num_q_blocks, num_kv_blocks) — the last axis is
     sequential on TPU, so the online-softmax running state (m, l, acc) lives
     in VMEM scratch that persists across kv-block iterations;
   * BlockSpecs tile Q/K/V into (block_q x d) / (block_k x d) VMEM tiles with
-    d padded to the 128-lane register width by construction (head_dim is a
-    multiple of 128 for every assigned arch except whisper's 64, which still
-    tiles legally);
+    head_dim zero-padded to the 128-lane register width inside this module
+    (whisper's 64 and the reduced configs' 32 no longer rely on "tiles
+    legally" — padding lanes are provably inert: zero K/V lanes add zero to
+    every dot product and the padded output/grad lanes are sliced off);
   * GQA is expressed in the K/V index_map (query head h reads kv head
     h // rep) — no materialized head repetition in HBM;
   * causal + sliding-window masking is applied per tile; fully-masked tiles
     short-circuit via @pl.when so the MXU never sees them.
 
-Validated on CPU with interpret=True against ref.attention_ref.
+Ragged batches (the bucket-ladder hot path, DESIGN.md §14): ``num_valid``
+is a *traced* int32 — one compiled executable per bucket shape serves every
+valid count.  It is threaded three ways, belt and braces:
+  * the batch grid extent itself is ``num_valid`` (Pallas grids accept
+    dynamic dimensions), so programs for padded rows are never launched;
+  * ``num_valid`` is also scalar-prefetched into the kernel and every
+    program guards on ``batch_index < num_valid`` via @pl.when, so a
+    static-grid fallback still skips padded-row compute at tile granularity;
+  * index maps clamp the batch coordinate below ``num_valid`` so a guarded
+    program can never prefetch an out-of-range block.
+Padded rows of every output (and every gradient) are written as exact
+zeros — never NaN/garbage — because downstream masked reductions multiply
+them by zero and ``0 * NaN`` would poison the whole gradient.
+
+``ragged_impl`` selects how raggedness executes:
+  * ``"grid"``  — dynamic batch-grid extent as above (the TPU form);
+  * ``"rowloop"`` — the batch axis hoisted into a ``lax.fori_loop`` with
+    trip count ``num_valid``, each row a b=1 pallas_call.  Semantically
+    identical (a TPU batch grid axis IS a sequential outer loop); this form
+    also realizes the wall-clock skip under interpret mode, where the
+    in-grid emulation pays per-program overhead proportional to the full
+    buffer (measured in benchmarks/kernel_bench.py);
+  * ``"auto"`` — rowloop under interpret, grid otherwise.
+
+Validated on CPU with interpret=True against ref.attention_ref (forward)
+and the jnp-oracle vjp (backward, tests/test_kernel_ragged.py).
 """
 
 from __future__ import annotations
@@ -28,15 +54,85 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+LANE = 128  # TPU register lane width: last block dim should be a multiple
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  block_q: int, block_k: int, seq_q: int, seq_k: int,
-                  causal: bool, window: Optional[int],
-                  softcap: Optional[float], sm_scale: float):
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pad_lanes(x):
+    """Zero-pad head_dim up to the 128-lane width (identity if aligned)."""
+    d = x.shape[-1]
+    dp = _ceil_to(d, LANE)
+    if dp == d:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, dp - d)])
+
+
+def _resolve_impl(ragged_impl: str, interpret: bool) -> str:
+    if ragged_impl == "auto":
+        return "rowloop" if interpret else "grid"
+    if ragged_impl not in ("grid", "rowloop"):
+        raise ValueError(f"unknown ragged_impl {ragged_impl!r}")
+    return ragged_impl
+
+
+def _guarded(gate, fn):
+    """Run fn under @pl.when(gate); a Python-True gate runs unconditionally."""
+    if gate is True:
+        fn()
+    else:
+        pl.when(gate)(fn)
+
+
+def _tile_visible(iq, ik, *, block_q, block_k, seq_q, seq_k, causal, window):
+    """Scalar predicate: does tile (iq, ik) contain any visible (q, k) pair?
+    (queries right-aligned when seq_q < seq_k: decode)"""
+    q_first = iq * block_q + (seq_k - seq_q)
+    q_last = q_first + block_q - 1
+    k_first = ik * block_k
+    k_last = ik * block_k + block_k - 1
+    visible = True
+    if causal:
+        visible = k_first <= q_last
+    if window is not None:
+        vis_w = k_last > q_first - window
+        visible = jnp.logical_and(visible, vis_w) if causal else vis_w
+    return visible
+
+
+def _tile_mask(iq, ik, *, block_q, block_k, seq_q, seq_k, causal, window):
+    """(block_q, block_k) bool visibility mask, or None if nothing masks."""
+    if not causal and window is None:
+        return None
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + (seq_k - seq_q)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask = jnp.logical_and(mask, k_pos <= q_pos)
+    if window is not None:
+        mask = jnp.logical_and(mask, k_pos > q_pos - window)
+    return mask
+
+
+# ----------------------------------------------------------------- forward
+
+
+def _fwd_kernel(*refs, block_q, block_k, seq_q, seq_k, causal, window,
+                softcap, sm_scale, ragged):
+    if ragged:
+        nv_ref, q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref \
+            = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref = refs
+    bi = pl.program_id(0)
     iq = pl.program_id(2)
     ik = pl.program_id(3)
     nk = pl.num_programs(3)
+    valid = (bi < nv_ref[0]) if ragged else True
 
     @pl.when(ik == 0)
     def init():
@@ -44,25 +140,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # absolute positions (queries right-aligned when seq_q < seq_k: decode)
-    q_pos = iq * block_q + jax.lax.broadcasted_iota(
-        jnp.int32, (block_q, block_k), 0) + (seq_k - seq_q)
-    k_pos = ik * block_k + jax.lax.broadcasted_iota(
-        jnp.int32, (block_q, block_k), 1)
+    geom = dict(block_q=block_q, block_k=block_k, seq_q=seq_q, seq_k=seq_k,
+                causal=causal, window=window)
+    visible = _tile_visible(iq, ik, **geom)
+    gate = visible if valid is True else (
+        jnp.logical_and(valid, visible) if visible is not True else valid)
 
-    # tile-level skip: is any (q, k) pair in this tile visible?
-    q_last = iq * block_q + block_q - 1 + (seq_k - seq_q)
-    k_first = ik * block_k
-    visible = True
-    if causal:
-        visible = k_first <= q_last
-    if window is not None:
-        q_first = iq * block_q + (seq_k - seq_q)
-        k_last = ik * block_k + block_k - 1
-        visible = jnp.logical_and(visible, k_last > q_first - window) \
-            if causal else (k_last > q_first - window)
-
-    @pl.when(visible if (causal or window is not None) else True)
     def compute():
         q = q_ref[0, :, 0, :].astype(jnp.float32)          # (bq, d)
         k = k_ref[0, :, 0, :].astype(jnp.float32)          # (bk, d)
@@ -70,12 +153,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
         if softcap is not None:
             s = softcap * jnp.tanh(s / softcap)
-        mask = jnp.ones_like(s, dtype=jnp.bool_)
-        if causal:
-            mask = jnp.logical_and(mask, k_pos <= q_pos)
-        if window is not None:
-            mask = jnp.logical_and(mask, k_pos > q_pos - window)
-        s = jnp.where(mask, s, NEG_INF)
+        mask = _tile_mask(iq, ik, **geom)
+        if mask is not None:
+            s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_ref[...]
         m_cur = jnp.maximum(m_prev, s.max(axis=-1))
@@ -86,51 +166,465 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             p, v, preferred_element_type=jnp.float32)
         m_ref[...] = m_cur
 
+    _guarded(gate, compute)
+
     @pl.when(ik == nk - 1)
     def finalize():
-        denom = jnp.maximum(l_ref[...], 1e-20)[:, None]
-        o_ref[0, :, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+        l_safe = jnp.maximum(l_ref[...], 1e-20)
+        out = acc_ref[...] / l_safe[:, None]
+        lse = m_ref[...] + jnp.log(l_safe)
+        if ragged:  # padded rows must be finite zeros, never garbage
+            out = jnp.where(valid, out, 0.0)
+            lse = jnp.where(valid, lse, 0.0)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+        lse_ref[0, 0, :] = lse
 
 
-def flash_attention(q, k, v, *, causal: bool = True,
-                    window: Optional[int] = None,
+def _fwd_call(q, k, v, nv, *, causal, window, softcap, sm_scale,
+              block_q, block_k, interpret):
+    """One pallas_call on lane-padded tensors -> (out, lse (B,H,S) f32)."""
+    b, s, h, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    ragged = nv is not None
+    kernel = functools.partial(
+        _fwd_kernel, block_q=block_q, block_k=block_k, seq_q=s, seq_k=t,
+        causal=causal, window=window, softcap=softcap, sm_scale=sm_scale,
+        ragged=ragged)
+    out_shape = [jax.ShapeDtypeStruct((b, s, h, d), q.dtype),
+                 jax.ShapeDtypeStruct((b, h, s), jnp.float32)]
+    scratch = [pltpu.VMEM((block_q,), jnp.float32),
+               pltpu.VMEM((block_q,), jnp.float32),
+               pltpu.VMEM((block_q, d), jnp.float32)]
+
+    if not ragged:
+        grid = (b, h, s // block_q, t // block_k)
+        out, lse = pl.pallas_call(
+            kernel, grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_q, 1, d),
+                             lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
+                pl.BlockSpec((1, block_k, 1, d),
+                             lambda b_, h_, iq, ik: (b_, ik, h_ // rep, 0)),
+                pl.BlockSpec((1, block_k, 1, d),
+                             lambda b_, h_, iq, ik: (b_, ik, h_ // rep, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, block_q, 1, d),
+                             lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
+                pl.BlockSpec((1, 1, block_q),
+                             lambda b_, h_, iq, ik: (b_, h_, iq)),
+            ],
+            out_shape=out_shape, scratch_shapes=scratch,
+            interpret=interpret)(q, k, v)
+        return out, lse
+
+    # ragged: dynamic batch-grid extent + scalar-prefetched guard; index
+    # maps clamp the batch coordinate so guarded programs never prefetch
+    # out-of-range blocks (DESIGN.md §14)
+    nv = jnp.asarray(nv, jnp.int32).reshape(-1)[:1]
+    nb = jnp.clip(nv[0], 0, b)
+    grid = (nb, h, s // block_q, t // block_k)
+
+    def bsel(b_, nvr):
+        return jnp.where(b_ < nvr[0], b_, 0)
+
+    out, lse = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_q, 1, d),
+                             lambda b_, h_, iq, ik, nvr:
+                             (bsel(b_, nvr), iq, h_, 0)),
+                pl.BlockSpec((1, block_k, 1, d),
+                             lambda b_, h_, iq, ik, nvr:
+                             (bsel(b_, nvr), ik, h_ // rep, 0)),
+                pl.BlockSpec((1, block_k, 1, d),
+                             lambda b_, h_, iq, ik, nvr:
+                             (bsel(b_, nvr), ik, h_ // rep, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, block_q, 1, d),
+                             lambda b_, h_, iq, ik, nvr: (b_, iq, h_, 0)),
+                pl.BlockSpec((1, 1, block_q),
+                             lambda b_, h_, iq, ik, nvr: (b_, h_, iq)),
+            ],
+            scratch_shapes=scratch),
+        out_shape=out_shape, interpret=interpret)(nv, q, k, v)
+    # rows the dynamic grid never launched hold uninitialized memory
+    rows = jax.lax.broadcasted_iota(jnp.int32, (b, 1, 1, 1), 0)
+    out = jnp.where(rows < nv[0], out, 0.0).astype(out.dtype)
+    lse = jnp.where(rows[..., 0] < nv[0], lse, 0.0)
+    return out, lse
+
+
+def _fwd_rowloop(q, k, v, nv, **kw):
+    """Batch axis hoisted to a dynamic-trip fori_loop of b=1 calls."""
+    b, s, h, _ = q.shape
+    out0 = jnp.zeros(q.shape, q.dtype)
+    lse0 = jnp.zeros((b, h, s), jnp.float32)
+
+    def body(i, carry):
+        out, lse = carry
+        sl = lambda x: jax.lax.dynamic_slice_in_dim(x, i, 1, 0)
+        o1, l1 = _fwd_call(sl(q), sl(k), sl(v), None, **kw)
+        out = jax.lax.dynamic_update_slice_in_dim(out, o1, i, 0)
+        lse = jax.lax.dynamic_update_slice_in_dim(lse, l1, i, 0)
+        return out, lse
+
+    trip = jnp.clip(jnp.asarray(nv, jnp.int32).reshape(-1)[0], 0, b)
+    return jax.lax.fori_loop(0, trip, body, (out0, lse0))
+
+
+def flash_attention(q, k, v, *, num_valid=None, ragged_impl: str = "auto",
+                    causal: bool = True, window: Optional[int] = None,
                     softcap: Optional[float] = None,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = False):
-    """q: (B,S,H,D), k/v: (B,T,Hkv,D) with H % Hkv == 0 -> (B,S,H,D)."""
+                    interpret: bool = False, return_lse: bool = False):
+    """q: (B,S,H,D), k/v: (B,T,Hkv,D) with H % Hkv == 0 -> (B,S,H,D).
+
+    num_valid: optional traced int32 — rows >= num_valid are skipped by the
+    grid (not just masked) and their outputs are exact zeros; one compile
+    per bucket shape covers every valid count.  return_lse additionally
+    returns the per-row logsumexp (B,H,S) f32 residual for the backward
+    kernels (zeros on padded rows).
+    """
     b, s, h, d = q.shape
     t, hkv = k.shape[1], k.shape[2]
     if h % hkv:
         raise ValueError(f"H={h} not divisible by Hkv={hkv}")
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    if s % block_q or t % block_k:
+        raise ValueError(
+            f"seq ({s},{t}) must divide blocks ({block_q},{block_k})")
+    kw = dict(causal=causal, window=window, softcap=softcap,
+              sm_scale=1.0 / math.sqrt(d), block_q=block_q, block_k=block_k,
+              interpret=interpret)
+    qp, kp, vp = _pad_lanes(q), _pad_lanes(k), _pad_lanes(v)
+
+    if num_valid is None:
+        out, lse = _fwd_call(qp, kp, vp, None, **kw)
+    elif _resolve_impl(ragged_impl, interpret) == "rowloop":
+        out, lse = _fwd_rowloop(qp, kp, vp, num_valid, **kw)
+    else:
+        out, lse = _fwd_call(qp, kp, vp, num_valid, **kw)
+    out = out[..., :d]
+    return (out, lse) if return_lse else out
+
+
+# ---------------------------------------------------------------- backward
+#
+# Standard flash backward split (DESIGN.md §14 memory plan): residuals are
+# (q, k, v, out, lse) — O(B·S·H·D) like the inputs, never the (S, T) score
+# matrix.  delta = rowsum(dO ⊙ O) is a cheap jnp reduction outside.  Two
+# kernels because the two accumulators stream in opposite orders:
+#   dq  : grid (B, H, nq, nk) — dq[iq] accumulates over k blocks;
+#   dkv : grid (B, H, nk, nq) — dk/dv[ik] accumulate over q blocks
+# each with VMEM scratch over the sequential last axis, the same trick as
+# the forward's (m, l, acc).  Shared per-tile math:
+#   p  = exp(s_soft - lse)  (masked)          ds = p * (dp - delta)
+#   dp = dO V^T                               [softcap chain rule below]
+#   dv += p^T dO      dq += ds K * sm_scale   dk += ds^T Q * sm_scale
+# For GQA the kernels emit per-q-head dk/dv; the (Hkv, rep) group-sum
+# happens outside (grad of the index-map head sharing).
+
+
+def _bwd_tile(q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref, iq, ik, *,
+              softcap, sm_scale, geom):
+    """Shared per-tile backward math -> (p, ds) both (bq, bk) f32."""
+    q = q_ref[0, :, 0, :].astype(jnp.float32)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    do = do_ref[0, :, 0, :].astype(jnp.float32)
+    lse = lse_ref[0, 0, :]
+    delta = dl_ref[0, 0, :]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+    if softcap is not None:
+        s_soft = softcap * jnp.tanh(s / softcap)
+    else:
+        s_soft = s
+    p = jnp.exp(s_soft - lse[:, None])
+    mask = _tile_mask(iq, ik, **geom)
+    if mask is not None:
+        p = jnp.where(mask, p, 0.0)
+    dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[:, None])
+    if softcap is not None:  # d tanh: 1 - (s_soft / cap)^2
+        ds = ds * (1.0 - jnp.square(s_soft / softcap))
+    return q, k, do, p, ds
+
+
+def _dq_kernel(*refs, block_q, block_k, seq_q, seq_k, causal, window,
+               softcap, sm_scale, ragged):
+    if ragged:
+        nv_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref, dq_ref, \
+            dq_acc = refs
+    else:
+        q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref, dq_ref, dq_acc = refs
+    bi = pl.program_id(0)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+    valid = (bi < nv_ref[0]) if ragged else True
+
+    @pl.when(ik == 0)
+    def init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    geom = dict(block_q=block_q, block_k=block_k, seq_q=seq_q, seq_k=seq_k,
+                causal=causal, window=window)
+    visible = _tile_visible(iq, ik, **geom)
+    gate = visible if valid is True else (
+        jnp.logical_and(valid, visible) if visible is not True else valid)
+
+    def compute():
+        _, k, _, _, ds = _bwd_tile(q_ref, k_ref, v_ref, do_ref, lse_ref,
+                                   dl_ref, iq, ik, softcap=softcap,
+                                   sm_scale=sm_scale, geom=geom)
+        dq_acc[...] += jnp.dot(ds, k,
+                               preferred_element_type=jnp.float32) * sm_scale
+
+    _guarded(gate, compute)
+
+    @pl.when(ik == nk - 1)
+    def finalize():
+        dq = dq_acc[...]
+        if ragged:
+            dq = jnp.where(valid, dq, 0.0)
+        dq_ref[0, :, 0, :] = dq.astype(dq_ref.dtype)
+
+
+def _dkv_kernel(*refs, block_q, block_k, seq_q, seq_k, causal, window,
+                softcap, sm_scale, ragged):
+    if ragged:
+        nv_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref, dk_ref, \
+            dv_ref, dk_acc, dv_acc = refs
+    else:
+        q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref, dk_ref, dv_ref, \
+            dk_acc, dv_acc = refs
+    bi = pl.program_id(0)
+    ik = pl.program_id(2)   # kv block: this program's output tile
+    iq = pl.program_id(3)   # q block: the sequential accumulation axis
+    nq = pl.num_programs(3)
+    valid = (bi < nv_ref[0]) if ragged else True
+
+    @pl.when(iq == 0)
+    def init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    geom = dict(block_q=block_q, block_k=block_k, seq_q=seq_q, seq_k=seq_k,
+                causal=causal, window=window)
+    visible = _tile_visible(iq, ik, **geom)
+    gate = visible if valid is True else (
+        jnp.logical_and(valid, visible) if visible is not True else valid)
+
+    def compute():
+        q, _, do, p, ds = _bwd_tile(q_ref, k_ref, v_ref, do_ref, lse_ref,
+                                    dl_ref, iq, ik, softcap=softcap,
+                                    sm_scale=sm_scale, geom=geom)
+        dv_acc[...] += jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+        dk_acc[...] += jnp.dot(ds.T, q,
+                               preferred_element_type=jnp.float32) * sm_scale
+
+    _guarded(gate, compute)
+
+    @pl.when(iq == nq - 1)
+    def finalize():
+        dk, dv = dk_acc[...], dv_acc[...]
+        if ragged:
+            dk = jnp.where(valid, dk, 0.0)
+            dv = jnp.where(valid, dv, 0.0)
+        dk_ref[0, :, 0, :] = dk.astype(dk_ref.dtype)
+        dv_ref[0, :, 0, :] = dv.astype(dv_ref.dtype)
+
+
+def _bwd_call(q, k, v, do, lse, delta, nv, *, causal, window, softcap,
+              sm_scale, block_q, block_k, interpret):
+    """dq + dkv pallas_calls on lane-padded tensors.
+
+    Returns (dq (B,S,H,D), dk (B,T,H,D), dv (B,T,H,D)) — dk/dv per q-head,
+    GQA group-sum is the caller's job."""
+    b, s, h, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    ragged = nv is not None
+    kw = dict(block_q=block_q, block_k=block_k, seq_q=s, seq_k=t,
+              causal=causal, window=window, softcap=softcap,
+              sm_scale=sm_scale, ragged=ragged)
+    nq, nk = s // block_q, t // block_k
+
+    if ragged:
+        nv = jnp.asarray(nv, jnp.int32).reshape(-1)[:1]
+        nb = jnp.clip(nv[0], 0, b)
+    else:
+        nb = b
+
+    def spec(block, fn):
+        if not ragged:
+            return pl.BlockSpec(block, fn)
+        return pl.BlockSpec(
+            block, lambda *ix: fn(*ix[:-1], nvr=ix[-1]))
+
+    def bsel(b_, nvr):
+        return b_ if nvr is None else jnp.where(b_ < nvr[0], b_, 0)
+
+    # ---- dq: grid (B, H, nq, nk), accumulate over the trailing k axis ----
+    def q_at_2(b_, h_, i2, i3, nvr=None):
+        return (bsel(b_, nvr), i2, h_, 0)
+
+    def kv_at_3(b_, h_, i2, i3, nvr=None):
+        return (bsel(b_, nvr), i3, h_ // rep, 0)
+
+    def row_at_2(b_, h_, i2, i3, nvr=None):
+        return (bsel(b_, nvr), h_, i2)
+
+    def out_q_at_2(b_, h_, i2, i3, nvr=None):
+        return (b_, i2, h_, 0)
+
+    dq_in_specs = [
+        spec((1, block_q, 1, d), q_at_2),    # q
+        spec((1, block_k, 1, d), kv_at_3),   # k
+        spec((1, block_k, 1, d), kv_at_3),   # v
+        spec((1, block_q, 1, d), q_at_2),    # do
+        spec((1, 1, block_q), row_at_2),     # lse
+        spec((1, 1, block_q), row_at_2),     # delta
+    ]
+    dq_args = dict(
+        out_shape=jax.ShapeDtypeStruct((b, s, h, d), q.dtype),
+        interpret=interpret)
+    dq_scratch = [pltpu.VMEM((block_q, d), jnp.float32)]
+    dq_kernel = functools.partial(_dq_kernel, **kw)
+    if ragged:
+        dq = pl.pallas_call(
+            dq_kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1, grid=(nb, h, nq, nk),
+                in_specs=dq_in_specs,
+                out_specs=spec((1, block_q, 1, d), out_q_at_2),
+                scratch_shapes=dq_scratch),
+            **dq_args)(nv, q, k, v, do, lse, delta)
+    else:
+        dq = pl.pallas_call(
+            dq_kernel, grid=(nb, h, nq, nk), in_specs=dq_in_specs,
+            out_specs=spec((1, block_q, 1, d), out_q_at_2),
+            scratch_shapes=dq_scratch, **dq_args)(q, k, v, do, lse, delta)
+
+    # ---- dkv: grid (B, H, nk, nq), accumulate over the trailing q axis ----
+    def q_at_3(b_, h_, i2, i3, nvr=None):
+        return (bsel(b_, nvr), i3, h_, 0)
+
+    def kv_at_2(b_, h_, i2, i3, nvr=None):
+        return (bsel(b_, nvr), i2, h_ // rep, 0)
+
+    def row_at_3(b_, h_, i2, i3, nvr=None):
+        return (bsel(b_, nvr), h_, i3)
+
+    def out_kv_at_2(b_, h_, i2, i3, nvr=None):
+        return (b_, i2, h_, 0)
+
+    dkv_in_specs = [
+        spec((1, block_q, 1, d), q_at_3),    # q
+        spec((1, block_k, 1, d), kv_at_2),   # k
+        spec((1, block_k, 1, d), kv_at_2),   # v
+        spec((1, block_q, 1, d), q_at_3),    # do
+        spec((1, 1, block_q), row_at_3),     # lse
+        spec((1, 1, block_q), row_at_3),     # delta
+    ]
+    dkv_out_specs = [spec((1, block_k, 1, d), out_kv_at_2),
+                     spec((1, block_k, 1, d), out_kv_at_2)]
+    dkv_args = dict(
+        out_shape=[jax.ShapeDtypeStruct((b, t, h, d), k.dtype),
+                   jax.ShapeDtypeStruct((b, t, h, d), v.dtype)],
+        interpret=interpret)
+    dkv_scratch = [pltpu.VMEM((block_k, d), jnp.float32),
+                   pltpu.VMEM((block_k, d), jnp.float32)]
+    dkv_kernel = functools.partial(_dkv_kernel, **kw)
+    if ragged:
+        dk, dv = pl.pallas_call(
+            dkv_kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1, grid=(nb, h, nk, nq),
+                in_specs=dkv_in_specs, out_specs=dkv_out_specs,
+                scratch_shapes=dkv_scratch),
+            **dkv_args)(nv, q, k, v, do, lse, delta)
+    else:
+        dk, dv = pl.pallas_call(
+            dkv_kernel, grid=(nb, h, nk, nq), in_specs=dkv_in_specs,
+            out_specs=dkv_out_specs, scratch_shapes=dkv_scratch,
+            **dkv_args)(q, k, v, do, lse, delta)
+
+    if ragged:  # rows the dynamic grid never launched
+        rows = jax.lax.broadcasted_iota(jnp.int32, (b, 1, 1, 1), 0)
+        dq = jnp.where(rows < nv[0], dq, 0.0).astype(dq.dtype)
+        dk = jnp.where(rows < nv[0], dk, 0.0).astype(dk.dtype)
+        dv = jnp.where(rows < nv[0], dv, 0.0).astype(dv.dtype)
+    return dq, dk, dv
+
+
+def _bwd_rowloop(q, k, v, do, lse, delta, nv, **kw):
+    b = q.shape[0]
+    t, h = k.shape[1], q.shape[2]
+    d = q.shape[-1]
+    zeros = (jnp.zeros(q.shape, q.dtype),
+             jnp.zeros((b, t, h, d), k.dtype),
+             jnp.zeros((b, t, h, d), v.dtype))
+
+    def body(i, carry):
+        dq, dk, dv = carry
+        sl = lambda x: jax.lax.dynamic_slice_in_dim(x, i, 1, 0)
+        dq1, dk1, dv1 = _bwd_call(sl(q), sl(k), sl(v), sl(do), sl(lse),
+                                  sl(delta), None, **kw)
+        dq = jax.lax.dynamic_update_slice_in_dim(dq, dq1, i, 0)
+        dk = jax.lax.dynamic_update_slice_in_dim(dk, dk1, i, 0)
+        dv = jax.lax.dynamic_update_slice_in_dim(dv, dv1, i, 0)
+        return dq, dk, dv
+
+    trip = jnp.clip(jnp.asarray(nv, jnp.int32).reshape(-1)[0], 0, b)
+    return jax.lax.fori_loop(0, trip, body, zeros)
+
+
+def flash_attention_bwd(q, k, v, do, out, lse, *, num_valid=None,
+                        ragged_impl: str = "auto", causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = False):
+    """Pallas backward: (dq, dk, dv) for the flash_attention forward.
+
+    do/out/lse are the upstream cotangent and the forward's saved
+    (output, logsumexp) residuals.  Raggedness mirrors the forward: padded
+    rows contribute nothing and receive exact-zero gradients."""
+    b, s, h, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
     rep = h // hkv
     block_q = min(block_q, s)
     block_k = min(block_k, t)
     if s % block_q or t % block_k:
-        raise ValueError(f"seq ({s},{t}) must divide blocks ({block_q},{block_k})")
-    grid = (b, h, s // block_q, t // block_k)
+        raise ValueError(
+            f"seq ({s},{t}) must divide blocks ({block_q},{block_k})")
+    # delta = rowsum(dO . O): the only extra residual the flash backward
+    # needs beyond lse; (B, H, S) f32 like lse
+    delta = (do.astype(jnp.float32) * out.astype(jnp.float32)) \
+        .sum(-1).transpose(0, 2, 1)
+    kw = dict(causal=causal, window=window, softcap=softcap,
+              sm_scale=1.0 / math.sqrt(d), block_q=block_q, block_k=block_k,
+              interpret=interpret)
+    qp, kp, vp, dop = (_pad_lanes(x) for x in (q, k, v, do))
 
-    kernel = functools.partial(
-        _flash_kernel, block_q=block_q, block_k=block_k, seq_q=s, seq_k=t,
-        causal=causal, window=window, softcap=softcap,
-        sm_scale=1.0 / math.sqrt(d))
+    if num_valid is None:
+        dq, dk, dv = _bwd_call(qp, kp, vp, dop, lse, delta, None, **kw)
+    elif _resolve_impl(ragged_impl, interpret) == "rowloop":
+        dq, dk, dv = _bwd_rowloop(qp, kp, vp, dop, lse, delta, num_valid,
+                                  **kw)
+    else:
+        dq, dk, dv = _bwd_call(qp, kp, vp, dop, lse, delta, num_valid, **kw)
 
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
-            pl.BlockSpec((1, block_k, 1, d),
-                         lambda b_, h_, iq, ik, rep=rep: (b_, ik, h_ // rep, 0)),
-            pl.BlockSpec((1, block_k, 1, d),
-                         lambda b_, h_, iq, ik, rep=rep: (b_, ik, h_ // rep, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, block_q, 1, d),
-                               lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, s, h, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((block_q,), jnp.float32),
-            pltpu.VMEM((block_q,), jnp.float32),
-            pltpu.VMEM((block_q, d), jnp.float32),
-        ],
-        interpret=interpret,
-    )(q, k, v)
+    dq = dq[..., :d]
+    # GQA group-sum: per-q-head dk/dv -> shared kv heads (grad of the
+    # index-map head sharing h -> h // rep)
+    dk = dk[..., :d].reshape(b, t, hkv, rep, d).sum(3).astype(k.dtype)
+    dv = dv[..., :d].reshape(b, t, hkv, rep, d).sum(3).astype(v.dtype)
+    return dq, dk, dv

@@ -222,13 +222,17 @@ def init_gqa(key, cfg: ModelConfig, d_model=None, num_heads=None, num_kv=None,
 
 def gqa_attention(p, x, cfg: ModelConfig, *, positions=None, cache=None,
                   window=None, use_rope=True, cross_kv=None, softcap=None,
-                  causal=True):
+                  causal=True, num_valid=None):
     """GQA/MQA/MHA self- or cross-attention with optional KV cache.
 
     cache: None, or dict {k: (B, T, Hkv, Dh), v: ..., idx: ()} — decode mode
     writes x's projections at position idx and attends over the cache.
     cross_kv: precomputed (k, v) for encoder-decoder cross attention.
-    Returns (out, new_cache).
+    num_valid: optional traced int32 valid-row count for bucket-padded
+    batches — only honored on the Pallas kernel path (training/prefill),
+    where padded rows are grid-skipped instead of merely loss-masked
+    (DESIGN.md §14); other paths compute padded rows and rely on the loss
+    mask as before.  Returns (out, new_cache).
     """
     b, s, d = x.shape
     h = p["wq"]["w"].shape[1]
@@ -265,6 +269,7 @@ def gqa_attention(p, x, cfg: ModelConfig, *, positions=None, cache=None,
 
             out = attention(
                 q, k, v, causal=True, window=window, softcap=softcap,
+                num_valid=num_valid,
                 interpret=jax.default_backend() == "cpu")
         elif cfg.attn_chunk is not None and s % min(cfg.attn_chunk, s) == 0:
             out = chunked_attention_scores(

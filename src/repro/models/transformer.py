@@ -68,17 +68,20 @@ def init_block(key, cfg: ModelConfig, kind: str):
     return p
 
 
-def apply_block(p, x, cfg: ModelConfig, kind: str, cache, positions):
+def apply_block(p, x, cfg: ModelConfig, kind: str, cache, positions,
+                num_valid=None):
     h = L.apply_norm(p["norm1"], x, cfg)
     if kind in ("attn", "local"):
         window = cfg.local_window if kind == "local" else cfg.window
         if cfg.attention == "mla":
+            # the ragged kernel path is GQA-family only; MLA keeps the
+            # loss-mask semantics for padded rows
             out, new_cache = L.mla_attention(
                 p["attn"], h, cfg, positions=positions, cache=cache, window=window)
         else:
             out, new_cache = L.gqa_attention(
                 p["attn"], h, cfg, positions=positions, cache=cache,
-                window=window, softcap=cfg.attn_softcap)
+                window=window, softcap=cfg.attn_softcap, num_valid=num_valid)
     elif kind == "rec":
         out, new_cache = R.recurrent_block(p["rec"], h, cfg, cache)
     else:  # ssd
@@ -160,12 +163,15 @@ def apply_lm(
     prefix_embeds=None,
     caches=None,
     positions=None,
+    num_valid=None,
 ):
     """Forward pass.
 
     tokens: (B, S) int32. prefix_embeds: optional (B, P, D) patch/frame
     embeddings overwriting the first P positions (VLM stub frontend).
     caches: decode-mode cache pytree from init_caches (S must be 1).
+    num_valid: optional traced int32 valid-row count for bucket-padded
+    batches, threaded to the attention kernels (DESIGN.md §14).
     Returns (logits (B,S,V) float32, new_caches, aux_loss scalar).
     """
     pattern = block_pattern(cfg)
@@ -187,7 +193,7 @@ def apply_lm(
             new_caches = None
             for i, kind in enumerate(pattern):
                 xc, _, a = apply_block(p_group[f"b{i}"], xc, cfg, kind, None,
-                                       positions)
+                                       positions, num_valid)
                 xc = constrain(xc, "activations")
                 aux = aux + a
         else:
@@ -195,7 +201,8 @@ def apply_lm(
             new_caches = {}
             for i, kind in enumerate(pattern):
                 xc, nc, a = apply_block(p_group[f"b{i}"], xc, cfg, kind,
-                                        cache_group[f"b{i}"], positions)
+                                        cache_group[f"b{i}"], positions,
+                                        num_valid)
                 xc = constrain(xc, "activations")
                 new_caches[f"b{i}"] = nc
                 aux = aux + a
@@ -220,7 +227,7 @@ def apply_lm(
         for i in range(n_tail):
             cache_i = caches["tail"][f"t{i}"] if caches is not None else None
             x, nc, a = apply_block(params["tail"][f"t{i}"], x, cfg, pattern[i],
-                                   cache_i, positions)
+                                   cache_i, positions, num_valid)
             new_tail[f"t{i}"] = nc
             aux = aux + a
         if caches is not None:
@@ -235,13 +242,17 @@ def apply_lm(
 
 
 def lm_loss(params, cfg: ModelConfig, tokens, targets, mask,
-            prefix_embeds=None):
+            prefix_embeds=None, num_valid=None):
     """Per-example-weighted cross-entropy.
 
     mask: (B,) example weights (the variable-batching lambda masks) or
-    (B, S) token weights. Returns (weighted loss sum, weight sum, aux).
+    (B, S) token weights. num_valid: optional traced valid-row count for
+    bucket-padded batches — must agree with mask (rows >= num_valid carry
+    zero weight; see train/mesh.py's suffix-padding contract).
+    Returns (weighted loss sum, weight sum, aux).
     """
-    logits, _, aux = apply_lm(params, cfg, tokens, prefix_embeds=prefix_embeds)
+    logits, _, aux = apply_lm(params, cfg, tokens, prefix_embeds=prefix_embeds,
+                              num_valid=num_valid)
     nll = L.sharded_xent(logits, targets)
     if mask.ndim == 1:
         tok_w = jnp.broadcast_to(mask[:, None], nll.shape)

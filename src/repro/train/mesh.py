@@ -478,6 +478,18 @@ class MeshTrainer:
         microbatch, so the first b_k stream examples are identical to an
         unpadded fetch), places data on the worker's slice, and returns
         with the call still in flight — JAX async dispatch unblocked.
+
+        SUFFIX-PADDING CONTRACT (DESIGN.md §14): the mask built here —
+        ``arange(bucket) < batch_size`` — is the single source of truth for
+        which rows are real.  Valid rows always form a *prefix*; padding is
+        always a suffix.  Kernel-enabled workloads (api/workload.py
+        ``lm_workload(use_kernel=True)``) recover the ragged kernel's
+        ``num_valid`` by counting this mask's nonzero rows, so the rows the
+        loss masks out are exactly the rows the Pallas grid skips.  The
+        contract survives data-axis sharding: each shard holds a contiguous
+        chunk of rows, and a global prefix restricted to a contiguous chunk
+        is still a prefix.  Don't reorder rows here without updating that
+        derivation.
         """
         rec = self._exec[worker]
         bucket = self.bucket_for(worker, batch_size)
