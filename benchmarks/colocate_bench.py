@@ -37,6 +37,15 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 from backend_bench import _force_cpu_devices  # noqa: E402
 
+# every CSV row also lands here so --emit-json can merge the run into the
+# per-PR perf-trajectory artifact (benchmarks/artifact.py)
+_ROWS: list = []
+
+
+def _emit(name, value, derived) -> None:
+    _ROWS.append((name, float(value), derived))
+    print(f"{name},{float(value):.4g},{derived}")
+
 
 def _mean(xs):
     return sum(xs) / max(len(xs), 1)
@@ -96,16 +105,16 @@ def run_shared(args, mesh) -> None:
     others = [i for i in range(trainer.k) if i != contended]
 
     b_first, b_last = hist[0].batches, hist[-1].batches
-    print(f"colocate/contended_worker,{contended},serve slice "
-          f"{trainer.serve_slice.start}+{trainer.serve_slice.length} "
-          f"time-multiplexed")
-    print(f"colocate/contended_batch_first,{b_first[contended]},"
+    _emit("colocate/contended_worker", contended,
+          f"serve slice {trainer.serve_slice.start}+"
+          f"{trainer.serve_slice.length} time-multiplexed")
+    _emit("colocate/contended_batch_first", b_first[contended],
           f"batches_first={b_first}")
-    print(f"colocate/contended_batch_last,{b_last[contended]},"
+    _emit("colocate/contended_batch_last", b_last[contended],
           f"batches_last={b_last}")
     drop = b_last[contended] / max(b_first[contended], 1)
-    print(f"colocate/contended_batch_ratio,{drop:.4g},"
-          f"last/first controller-chosen batch on the contended worker")
+    _emit("colocate/contended_batch_ratio", drop,
+          "last/first controller-chosen batch on the contended worker")
 
     # equal-iteration-time invariant under interference, judged on the
     # quantity the controller drives to equality: the measurement
@@ -120,7 +129,7 @@ def run_shared(args, mesh) -> None:
         for k in range(trainer.k)]
     ratio = smoothed[contended] / max(
         _mean([smoothed[i] for i in others]), 1e-12)
-    print(f"colocate/round_time_ratio,{ratio:.4g},"
+    _emit("colocate/round_time_ratio", ratio,
           f"controller-facing EWMA round time, contended / uncontended, "
           f"averaged over last {len(tail)} rounds (1.0 = equalized)")
 
@@ -134,30 +143,30 @@ def run_shared(args, mesh) -> None:
         for i in range(trainer.k)]
     raw_ratio = per_worker[contended] / max(
         _mean([per_worker[i] for i in others]), 1e-12)
-    print(f"colocate/round_time_ratio_raw,{raw_ratio:.4g},"
-          f"trimmed-mean RAW per-round times (informational: spikier than "
-          f"the controller's filtered view)")
+    _emit("colocate/round_time_ratio_raw", raw_ratio,
+          "trimmed-mean RAW per-round times (informational: spikier than "
+          "the controller's filtered view)")
     adjusted = sum(r.adjusted for r in hist)
-    print(f"colocate/adjustments,{adjusted},controller updates over "
-          f"{len(hist)} rounds")
+    _emit("colocate/adjustments", adjusted,
+          f"controller updates over {len(hist)} rounds")
 
     serve_stats = trainer.serve_stats()
     dd = serve_stats["decode_step_ms"]
-    print(f"colocate/decode_step_ms_p50,{dd['p50']:.4g},"
+    _emit("colocate/decode_step_ms_p50", dd["p50"],
           f"p95={dd['p95']:.4g} p99={dd['p99']:.4g}")
-    print(f"colocate/queue_delay_mean,"
-          f"{serve_stats['queue_delay_steps']['mean']:.4g},"
+    _emit("colocate/queue_delay_mean",
+          serve_stats["queue_delay_steps"]["mean"],
           f"p95={serve_stats['queue_delay_steps']['p95']:.4g} (scheduler "
           f"steps from arrival to admission)")
-    print(f"colocate/requests_finished,{serve_stats['requests_finished']},"
+    _emit("colocate/requests_finished", serve_stats["requests_finished"],
           f"submitted={serve_stats['requests_submitted']} "
           f"queued={serve_stats['requests_queued']}")
-    print(f"colocate/charged_seconds,"
-          f"{serve_stats['charged_seconds']:.4g},decode seconds charged to "
-          f"worker {contended}'s measured step times")
+    _emit("colocate/charged_seconds", serve_stats["charged_seconds"],
+          f"decode seconds charged to worker {contended}'s measured step "
+          f"times")
 
     if args.steps < 30:
-        print("colocate/asserts,0,skipped (--steps < 30: no steady state)")
+        _emit("colocate/asserts", 0, "skipped (--steps < 30: no steady state)")
         return
     assert serve_stats["charged_seconds"] > 0, "no interference was charged"
     assert b_last[contended] < b_first[contended], (
@@ -168,7 +177,7 @@ def run_shared(args, mesh) -> None:
         f"equal-iteration-time invariant violated under interference: "
         f"contended/uncontended mean round time = {ratio:.3f} "
         f"(per-worker means: {per_worker})")
-    print("colocate/asserts,1,batch dropped + round times within 10%")
+    _emit("colocate/asserts", 1, "batch dropped + round times within 10%")
 
 
 def run_policy(args, mesh) -> None:
@@ -192,19 +201,19 @@ def run_policy(args, mesh) -> None:
 
     grows = [a for a in trainer.policy_log if a[1] == "grow"]
     shrinks = [a for a in trainer.policy_log if a[1] == "shrink"]
-    print(f"colocate/policy_grow_actions,{len(grows)},"
+    _emit("colocate/policy_grow_actions", len(grows),
           f"training yielded a device at steps {[s for s, _, _ in grows]}")
-    print(f"colocate/policy_shrink_actions,{len(shrinks)},"
+    _emit("colocate/policy_shrink_actions", len(shrinks),
           f"capacity returned at steps {[s for s, _, _ in shrinks]}")
-    print(f"colocate/reserve_final,{trainer.reserve},"
+    _emit("colocate/reserve_final", trainer.reserve,
           f"baseline={serve.devices} max_reached="
           f"{max(r for _, _, r in trainer.policy_log) if trainer.policy_log else serve.devices}")
-    print(f"colocate/train_extent_min,{min(extent_log)},"
+    _emit("colocate/train_extent_min", min(extent_log),
           f"of {trainer.data_extent} data-axis devices (burst of {burst} "
           f"rounds at rate {serve.requests_per_round})")
     stats = trainer.serve_stats()
-    print(f"colocate/policy_queue_delay_mean,"
-          f"{stats['queue_delay_steps']['mean']:.4g},"
+    _emit("colocate/policy_queue_delay_mean",
+          stats["queue_delay_steps"]["mean"],
           f"the burst deliberately breaches the SLO target "
           f"{serve.slo_queue_delay} to force the grow")
     if args.steps >= 30:
@@ -213,9 +222,11 @@ def run_policy(args, mesh) -> None:
         assert trainer.reserve == serve.devices, (
             f"reserve should return to the baseline {serve.devices}, "
             f"ended at {trainer.reserve}")
-        print("colocate/asserts,1,grow under SLO breach + capacity returned")
+        _emit("colocate/asserts", 1,
+              "grow under SLO breach + capacity returned")
     else:
-        print("colocate/asserts,0,skipped (--steps < 30: no steady state)")
+        _emit("colocate/asserts", 0,
+              "skipped (--steps < 30: no steady state)")
 
 
 def main() -> None:
@@ -245,6 +256,10 @@ def main() -> None:
     ap.add_argument("--decode-steps", type=int, default=4,
                     help="max scheduler steps per training round")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--emit-json", default=None,
+                    help="merge this run's rows into the per-PR "
+                         "perf-trajectory artifact, e.g. BENCH_7.json "
+                         "(benchmarks/artifact.py)")
     args = ap.parse_args()
 
     _force_cpu_devices(args.devices)
@@ -257,6 +272,17 @@ def main() -> None:
         run_shared(args, mesh)
     else:
         run_policy(args, mesh)
+    if args.emit_json:
+        import jax
+
+        from benchmarks.artifact import rows_to_payload, update_bench_json
+
+        update_bench_json(
+            args.emit_json, f"colocate_bench/{args.mode}", {
+                "steps": args.steps,
+                "rows": rows_to_payload(_ROWS),
+            },
+            meta={"jax": jax.__version__, "devices": args.devices})
 
 
 if __name__ == "__main__":

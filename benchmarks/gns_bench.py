@@ -1,0 +1,311 @@
+"""Two-level batch control benchmark (DESIGN.md §15).
+
+``--mode compare`` (default) runs the SAME seeded heterogeneous linreg
+Experiment twice on ``SimBackend`` — once with the outer loop pinned
+(``kind='fixed'``, the paper's constant-Σb_k behaviour) and once with the
+gradient-noise-scale controller (``kind='gns'``) — and reports
+time-to-target-loss in *simulated seconds*.  LinReg is sync-bound
+(t_sync >> w·b), so amortizing the per-iteration overhead over a larger
+noise-justified global batch buys real wall-clock: with ``--steps`` >=
+30 the bench ASSERTS the gns run reaches the fixed run's final loss in
+less simulated time.  It then reruns gns on the 8-fake-device debug mesh
+and ASSERTS per-worker bucket count (= recompile count) stays within the
+ladder bound of DESIGN.md §11 — an outer B_global resize walks the
+existing per-worker bucket ladders and never replans slices.
+
+``--mode resume`` exercises outer-state checkpointing on the mesh: run
+gns, ``Session.save``, restore into a fresh session, ASSERT the outer
+controller state (rung, EWMAs, resize log) is bit-identical, continue.
+
+Prints ``name,value,derived`` CSV like the other drivers.
+
+    PYTHONPATH=src python benchmarks/gns_bench.py [--steps 60]
+    PYTHONPATH=src python benchmarks/gns_bench.py --mode resume
+
+The CI smoke job runs ``--steps 3`` (assertions informational below 30
+steps).  See ``benchmarks/README.md`` for the row guide.
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import sys
+import tempfile
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from backend_bench import _force_cpu_devices  # noqa: E402
+
+_ROWS: list = []
+
+
+def _emit(name, value, derived) -> None:
+    _ROWS.append((name, float(value), derived))
+    print(f"{name},{float(value):.4g},{derived}")
+
+
+def _outer_config(kind: str, args):
+    from repro.core import GlobalBatchConfig
+
+    return GlobalBatchConfig(
+        kind=kind, max_factor=args.max_factor, ladder_growth=args.growth,
+        warmup=args.warmup, cooldown=args.cooldown,
+        gns_min_samples=4, hysteresis=0.25)
+
+
+def _run_sim(kind: str, args) -> dict:
+    from repro.api import (ClusterSpec, Experiment, SimBackend, TrainConfig,
+                           paper_workload)
+    from repro.optim import batch_coupled, sgd
+
+    # LR coupled linearly to B/B0 so the larger noise-justified batch also
+    # takes the proportionally larger step (DESIGN.md §15); under
+    # kind='fixed' the scale stays 1.0 and sgd(0.05) is reproduced exactly
+    exp = Experiment(
+        workload=paper_workload("linreg"),
+        cluster=ClusterSpec.hlevel(24, args.hlevel, args.workers,
+                                   workload="linreg", seed=args.seed,
+                                   backend=SimBackend()),
+        optimizer=sgd(batch_coupled(args.lr, rule="linear")),
+        config=TrainConfig(b0=args.b0, microbatch=args.b0, batching="dynamic",
+                           max_steps=args.steps, seed=args.seed,
+                           global_batch=_outer_config(kind, args)),
+    )
+    session = exp.session()
+    out = session.run()
+    out["trainer"] = session.trainer
+    return out
+
+
+def _time_to_loss(history, target: float) -> float:
+    """First simulated second at which the loss dips to ``target``."""
+    for rec in history:
+        if rec.loss <= target:
+            return rec.sim_time
+    return math.inf
+
+
+def _write_trace_csv(path: str, runs: dict) -> None:
+    """Per-step sim-race trace: one row per (kind, step)."""
+    with open(path, "w") as fh:
+        fh.write("kind,step,sim_time,loss,b_global\n")
+        for kind, out in runs.items():
+            for rec in out["history"]:
+                fh.write(f"{kind},{rec.step},{rec.sim_time:.6g},"
+                         f"{rec.loss:.6g},{sum(rec.batches)}\n")
+
+
+def run_compare(args, mesh) -> None:
+    # ------------------------------------------------------ sim section
+    fixed = _run_sim("fixed", args)
+    gns = _run_sim("gns", args)
+    if args.csv:
+        _write_trace_csv(args.csv, {"fixed": fixed, "gns": gns})
+
+    _emit("gns/fixed/final_loss", fixed["final_loss"],
+          f"sim_time={fixed['sim_time']:.4g}s B_global constant at "
+          f"{sum(fixed['final_batches'])}")
+    _emit("gns/gns/final_loss", gns["final_loss"],
+          f"sim_time={gns['sim_time']:.4g}s final B_global="
+          f"{sum(gns['final_batches'])} outer_resizes={gns['outer_resizes']}")
+
+    outer = gns["trainer"].outer
+    _emit("gns/gns/outer_resizes", gns["outer_resizes"],
+          f"resize_log={outer.resize_log} rungs={outer.rungs}")
+    est = getattr(outer, "estimator", None)
+    if est is not None and est.ready and est.b_noise is not None:
+        _emit("gns/gns/b_noise", min(est.b_noise, 1e12),
+              f"critical batch estimate after {est.samples} samples "
+              f"(G2={est.g2_ewma:.4g} S={est.s_ewma:.4g})")
+
+    # time-to-target, self-calibrated: the target is the loss the FIXED run
+    # ends at, so its own time-to-target is (almost) its full duration and
+    # the gns run must get there strictly sooner in simulated seconds
+    target = fixed["final_loss"] * (1.0 + args.target_slack)
+    t_fixed = _time_to_loss(fixed["history"], target)
+    t_gns = _time_to_loss(gns["history"], target)
+    speedup = t_fixed / t_gns if math.isfinite(t_gns) and t_gns > 0 else 0.0
+    _emit("gns/time_to_target_fixed", t_fixed,
+          f"simulated seconds to loss<={target:.4g}")
+    _emit("gns/time_to_target_gns",
+          t_gns if math.isfinite(t_gns) else -1.0,
+          f"simulated seconds to the fixed run's final loss (-1 = never)")
+    _emit("gns/sim_speedup", speedup,
+          "fixed/gns time-to-target in simulated seconds (>1 = gns wins)")
+
+    # ----------------------------------------------------- mesh section
+    from repro.api import (ClusterSpec, Experiment, MeshBackend, TrainConfig,
+                           paper_workload)
+    from repro.optim import batch_coupled, sgd
+
+    exp = Experiment(
+        workload=paper_workload("linreg"),
+        cluster=ClusterSpec.hlevel(24, args.hlevel, args.workers,
+                                   workload="linreg", seed=args.seed,
+                                   backend=MeshBackend(
+                                       mesh=mesh, dilation="from-spec",
+                                       growth=args.growth)),
+        optimizer=sgd(batch_coupled(args.lr, rule="linear")),
+        config=TrainConfig(b0=args.b0, microbatch=args.b0, batching="dynamic",
+                           max_steps=args.steps, seed=args.seed,
+                           global_batch=_outer_config("gns", args)),
+    )
+    session = exp.session()
+    out = session.run()
+    trainer = session.trainer
+
+    _emit("gns/mesh/steps", out["steps"],
+          f"final_batches={out['final_batches']} "
+          f"outer_resizes={out['outer_resizes']}")
+    per_worker = [sorted(b) for b in trainer.worker_buckets]
+    worst = max(len(b) for b in per_worker)
+    # an outer resize never replans slices: batches walk the per-worker
+    # bucket ladders, so compiles stay within the §11 ladder bound
+    bound = max(
+        math.ceil(math.log(b[-1] / b[0], args.growth)) + 1 if len(b) > 1
+        else 1 for b in per_worker)
+    _emit("gns/mesh/buckets_per_worker_max", worst,
+          f"ladder_bound={bound} buckets={per_worker}")
+    assert worst <= bound, (
+        f"per-worker bucket count {worst} exceeds the ladder bound {bound} "
+        f"under outer resizes: {per_worker}")
+    _emit("gns/mesh/recompiles_within_bound", 1,
+          f"max {worst} buckets <= ladder bound {bound} with "
+          f"{out['outer_resizes']} outer resizes")
+    scales = sorted(getattr(trainer, "_opt_jit_cache", {1.0: None}))
+    _emit("gns/mesh/lr_scales", len(scales),
+          f"distinct coupled-LR jit entries {scales} (bounded by the "
+          f"outer rung ladder, {len(trainer.outer.rungs)} rungs)")
+    assert len(scales) <= len(trainer.outer.rungs), \
+        "coupled-LR jit cache must be bounded by the rung ladder"
+
+    if args.steps < 30:
+        _emit("gns/asserts", 0, "skipped (--steps < 30: no steady state)")
+        return
+    assert gns["outer_resizes"] >= 1, (
+        "the gns outer loop never resized on the sim run — noise-dominated "
+        "linreg at this b0 should drive B up")
+    assert math.isfinite(t_gns) and t_gns < t_fixed, (
+        f"gns should reach the fixed run's final loss sooner in simulated "
+        f"seconds: gns={t_gns:.4g}s fixed={t_fixed:.4g}s")
+    _emit("gns/asserts", 1,
+          f"gns beat fixed to loss<={target:.4g} by {speedup:.3g}x "
+          f"+ mesh recompiles within ladder bound")
+
+
+def run_resume(args, mesh) -> None:
+    """Mesh outer-state checkpoint: run gns → save → restore → assert the
+    outer controller state round-trips bit-identically → continue."""
+    from repro.api import (ClusterSpec, Experiment, MeshBackend, TrainConfig,
+                           paper_workload)
+    from repro.optim import batch_coupled, sgd
+
+    def experiment():
+        return Experiment(
+            workload=paper_workload("linreg"),
+            cluster=ClusterSpec.hlevel(24, args.hlevel, args.workers,
+                                       workload="linreg", seed=args.seed,
+                                       backend=MeshBackend(
+                                           mesh=mesh, dilation="from-spec",
+                                           growth=args.growth)),
+            optimizer=sgd(batch_coupled(args.lr, rule="linear")),
+            config=TrainConfig(b0=args.b0, microbatch=args.b0,
+                               batching="dynamic", max_steps=2 * args.steps,
+                               seed=args.seed,
+                               global_batch=_outer_config("gns", args)),
+        )
+
+    path = os.path.join(tempfile.mkdtemp(), "gns-ckpt")
+    first = experiment().session()
+    for i, _rec in enumerate(first):
+        if i + 1 >= args.steps:
+            break
+    first.save(path)
+    resumed = experiment().session()
+    resumed.restore(path)
+    a = first.trainer.outer.state_dict()
+    b = resumed.trainer.outer.state_dict()
+    assert a == b, f"outer state not bit-identical after restore:\n{a}\n{b}"
+    _emit("gns/resume/outer_bit_identical", 1,
+          f"rung={b['rung']} B={b['rungs'][b['rung']]} "
+          f"resize_log={b['resize_log']} after restore at step {args.steps}")
+    sa = getattr(first.trainer.optimizer.schedule, "scale", 1.0)
+    sb = getattr(resumed.trainer.optimizer.schedule, "scale", 1.0)
+    assert sa == sb, f"coupled-LR scale diverged on restore: {sa} vs {sb}"
+    _emit("gns/resume/lr_scale", sb, "coupled-LR scale survives restore")
+    out = resumed.run()
+    assert out["steps"] == 2 * args.steps
+    _emit("gns/resume/continued_steps", out["steps"] - args.steps,
+          f"steps trained after restore (of {args.steps} expected)")
+    _emit("gns/resume/final_loss", out["final_loss"],
+          "finite loss after resumed training")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--mode", default="compare",
+                    choices=["compare", "resume"],
+                    help="compare = fixed-vs-gns sim race + mesh recompile "
+                         "bound; resume = mesh outer-state checkpoint check")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--devices", type=int, default=8,
+                    help="fake CPU devices for the debug mesh")
+    ap.add_argument("--workers", type=int, default=3)
+    ap.add_argument("--b0", type=int, default=4,
+                    help="per-worker initial batch; small, so the gradient "
+                         "noise scale sits well above B0 and the outer loop "
+                         "has headroom to grow into")
+    ap.add_argument("--hlevel", type=float, default=3.0)
+    ap.add_argument("--lr", type=float, default=0.02,
+                    help="base SGD learning rate at B0; deliberately "
+                         "conservative for the noisy small starting batch — "
+                         "the linear coupling rule raises it with B, which "
+                         "is where the gns wall-clock win comes from")
+    ap.add_argument("--growth", type=float, default=1.25)
+    ap.add_argument("--max-factor", type=float, default=8.0)
+    ap.add_argument("--warmup", type=int, default=6)
+    ap.add_argument("--cooldown", type=int, default=3)
+    ap.add_argument("--target-slack", type=float, default=0.02,
+                    help="relative slack on the fixed run's final loss when "
+                         "defining the shared time-to-target threshold")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--csv", default=None,
+                    help="also write the per-step sim-race trace "
+                         "(kind,step,sim_time,loss,b_global) to this file "
+                         "(compare mode only; CI archives it)")
+    ap.add_argument("--emit-json", default=None,
+                    help="merge this run's rows into the per-PR "
+                         "perf-trajectory artifact, e.g. BENCH_7.json "
+                         "(benchmarks/artifact.py)")
+    args = ap.parse_args()
+
+    _force_cpu_devices(args.devices)
+
+    from repro.launch.mesh import make_debug_mesh
+
+    mesh = make_debug_mesh(args.devices)
+    print("name,value,derived")
+    if args.mode == "compare":
+        run_compare(args, mesh)
+    else:
+        run_resume(args, mesh)
+    if args.emit_json:
+        import jax
+
+        from benchmarks.artifact import rows_to_payload, update_bench_json
+
+        update_bench_json(
+            args.emit_json, f"gns_bench/{args.mode}", {
+                "steps": args.steps,
+                "rows": rows_to_payload(_ROWS),
+            },
+            meta={"jax": jax.__version__, "devices": args.devices})
+
+
+if __name__ == "__main__":
+    main()

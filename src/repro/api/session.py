@@ -258,6 +258,9 @@ class Session:
             "wall_time": _time.perf_counter() - self._wall0,
             "batch_adjustments": (trainer.controller.num_updates
                                   if trainer.controller else 0),
+            "outer_resizes": (trainer.outer.num_resizes
+                              if getattr(trainer, "outer", None) is not None
+                              else 0),
             "history": trainer.history,
             "final_batches": list(trainer.batches),
         }
@@ -315,6 +318,10 @@ class Session:
             "smoothed_loss": self.smoothed_loss,
             "controller": (t.controller.state_dict()
                            if t.controller is not None else None),
+            # outer global-batch controller (DESIGN.md §15): EWMA moments,
+            # ladder position, last resize step, bandit counts + RNG
+            "outer": (t.outer.state_dict()
+                      if getattr(t, "outer", None) is not None else None),
             "engine": {
                 "version": t.engine.version,
                 "read_version": list(t.engine.read_version),
@@ -368,6 +375,16 @@ class Session:
         self.smoothed_loss = st["smoothed_loss"]
         if st["controller"] is not None and t.controller is not None:
             t.controller = controller_from_state_dict(st["controller"])
+        ckpt_outer = st.get("outer")
+        have_outer = getattr(t, "outer", None) is not None
+        if (ckpt_outer is not None) != have_outer:
+            raise ValueError(
+                "global-batch config mismatch: the checkpoint was written "
+                f"with kind={'fixed' if ckpt_outer is None else ckpt_outer['kind']!r} "
+                f"but this session runs kind={t.cfg.global_batch.kind!r} — "
+                "rebuild the Experiment with the matching GlobalBatchConfig")
+        if ckpt_outer is not None:
+            t.load_outer_state(ckpt_outer)
         if t.backend_kind == "sim":
             t.sim.time = float(st["sim"]["time"])
             t.sim.iteration = int(st["sim"]["iteration"])

@@ -97,6 +97,77 @@ def cores_proportional_allocation(cores: Sequence[int], b0: int, **kw) -> list[i
     return static_allocation([float(c) for c in cores], b0, **kw)
 
 
+def cost_aware_allocation(
+    throughputs: Sequence[float],
+    total: int,
+    *,
+    capacities: Optional[Sequence[Optional[int]]] = None,
+    prices: Optional[Sequence[float]] = None,
+    b_min: int = 1,
+) -> list[int]:
+    """Price/capacity-aware split of ``total`` examples across K workers.
+
+    Starts from the throughput-proportional ideal (paper §III-B), caps each
+    worker at its capacity (the b_mem memory cliff — feeding past it LOWERS
+    throughput, paper Fig. 5), then redistributes the capped surplus over
+    workers with headroom, weighted by throughput per unit price (spot $/hr;
+    uniform prices reduce to pure throughput weighting).  The final integer
+    plan conserves ``total`` exactly via largest-remainder apportionment; if
+    every capacity saturates, the bounds are relaxed proportionally rather
+    than failing (the caller asked for that global batch).
+
+    This is the allocator the OUTER global-batch controller routes its
+    initial B_global through (DESIGN.md §15) instead of the uniform
+    fallback.
+    """
+    k = len(throughputs)
+    if k == 0:
+        raise ValueError("need at least one worker")
+    if any(x <= 0 for x in throughputs):
+        raise ValueError(f"throughputs must be positive: {throughputs}")
+    if total < b_min * k:
+        raise ValueError(f"total {total} infeasible with b_min={b_min} x {k}")
+    caps = [
+        (int(c) if c is not None else 10**12)
+        for c in (capacities if capacities is not None else [None] * k)
+    ]
+    if len(caps) != k:
+        raise ValueError("need one capacity per worker")
+    if any(c < b_min for c in caps):
+        raise ValueError(f"capacities must be >= b_min={b_min}: {caps}")
+    costs = list(prices) if prices is not None else [1.0] * k
+    if len(costs) != k:
+        raise ValueError("need one price per worker")
+    if any(p <= 0 for p in costs):
+        raise ValueError(f"prices must be positive: {costs}")
+
+    s = sum(throughputs)
+    vals = [min(total * x / s, float(c)) for x, c in zip(throughputs, caps)]
+    remaining = total - sum(vals)
+    # redistribute capped surplus by value density (throughput per dollar)
+    for _ in range(k + 1):
+        if remaining <= 1e-9:
+            break
+        weights = [
+            (x / p) if v < c else 0.0
+            for x, p, v, c in zip(throughputs, costs, vals, caps)
+        ]
+        ws = sum(weights)
+        if ws <= 0:
+            break  # everyone saturated; largest_remainder_round relaxes hi
+        placed = 0.0
+        for i in range(k):
+            if weights[i] <= 0:
+                continue
+            take = min(remaining * weights[i] / ws, caps[i] - vals[i])
+            vals[i] += take
+            placed += take
+        remaining -= placed
+        if placed <= 1e-12:
+            break
+    return largest_remainder_round(vals, total, lo=b_min, hi=caps)
+
+
 def gradient_weights(batches: Sequence[int]) -> list[float]:
     """lambda_k = b_k / sum_i b_i  (paper Eq. 2). sum(lambda) == 1."""
     s = sum(batches)

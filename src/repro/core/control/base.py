@@ -265,6 +265,41 @@ class BatchController:
         self._on_update()
         return ControllerUpdate(self.batches, True, errors, "updated")
 
+    # --------------------------------------------------------- outer loop
+
+    def set_global_batch(self, total: int) -> list[int]:
+        """Outer-loop resize of the conserved Σb_k invariant (DESIGN.md §15).
+
+        The outer global-batch controller calls this when it walks the
+        ladder: per-worker shares are rescaled PROPORTIONALLY (each worker
+        keeps its fraction of the global batch, i.e. the inner law's learned
+        split survives the resize) with exact integer apportionment.
+        Adaptive per-worker ``b_max`` bounds and last-throughput history are
+        kept; EWMA windows are restarted like any committed readjustment —
+        old iteration times describe the old batch sizes.
+        """
+        total = int(total)
+        cfg = self.config
+        if total < cfg.b_min * len(self.workers):
+            raise ValueError(
+                f"global batch {total} infeasible with b_min={cfg.b_min} "
+                f"x {len(self.workers)} workers")
+        cur = sum(w.batch for w in self.workers)
+        if total == cur:
+            return self.batches
+        targets = [w.batch * total / max(cur, 1) for w in self.workers]
+        self.global_batch = total
+        new_batches = largest_remainder_round(
+            targets, total, lo=cfg.b_min,
+            hi=[self._hi_bound(w) for w in self.workers])
+        for w, nb in zip(self.workers, new_batches):
+            w.batch = int(nb)
+            w.ewma_time = None
+        self._iters_since_update = 0
+        self.history.append(self.batches)
+        self._on_update()
+        return self.batches
+
     # ---------------------------------------------------------- membership
 
     def remove_worker(self, k: int) -> list[int]:

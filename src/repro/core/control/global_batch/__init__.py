@@ -1,0 +1,35 @@
+"""Two-level batch control: the outer B_global(t) loop (DESIGN.md §15).
+
+`gns` holds the gradient-noise-scale estimator fed by the in-graph side
+stats from `core/grad.py`; `outer` holds `GlobalBatchConfig` and the
+fixed / geometric / gns / bandit controllers that walk the global bucket
+ladder.  The paper's inner P/PI/PID law (`core/control`) then splits each
+B_global across heterogeneous workers.
+"""
+
+from repro.core.control.global_batch.gns import GNSEstimator, GradStats
+from repro.core.control.global_batch.outer import (
+    GLOBAL_BATCH_KINDS,
+    BanditGlobalBatch,
+    FixedGlobalBatch,
+    GeometricGlobalBatch,
+    GlobalBatchConfig,
+    GlobalBatchController,
+    GNSGlobalBatch,
+    global_batch_from_state_dict,
+    make_global_controller,
+)
+
+__all__ = [
+    "GLOBAL_BATCH_KINDS",
+    "BanditGlobalBatch",
+    "FixedGlobalBatch",
+    "GeometricGlobalBatch",
+    "GlobalBatchConfig",
+    "GlobalBatchController",
+    "GNSEstimator",
+    "GNSGlobalBatch",
+    "GradStats",
+    "global_batch_from_state_dict",
+    "make_global_controller",
+]

@@ -28,6 +28,24 @@ import jax
 import jax.numpy as jnp
 
 
+def tree_sqnorm(tree):
+    """Squared L2 norm of a gradient pytree, |g|^2 = sum over leaves of sum(x^2).
+
+    Accumulated in fp32 regardless of leaf dtype.  This is the side statistic
+    the gradient-noise-scale estimator (DESIGN.md §15) needs from each
+    worker's mean gradient and from the combined gradient; it is meant to be
+    evaluated INSIDE the already-jitted accumulation/psum call so estimation
+    costs no extra pass over the model.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    out = jnp.zeros((), jnp.float32)
+    for leaf in leaves:
+        out = out + jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+    return out
+
+
 def combine_weighted(grads: Sequence, batches: Sequence[int]):
     """Weighted average of per-worker gradient pytrees with lambda_k weights."""
     if len(grads) != len(batches):
@@ -46,6 +64,18 @@ def combine_weighted(grads: Sequence, batches: Sequence[int]):
     return jax.tree_util.tree_map(_wsum, *grads)
 
 
+def combine_weighted_with_sqnorm(grads: Sequence, batches: Sequence[int]):
+    """`combine_weighted` plus the combined gradient's squared norm.
+
+    Returns ``(g, |g|^2)`` where g is the lambda-weighted combine.  Together
+    with the per-worker |g_k|^2 side stats carried out of each worker's
+    jitted call, this is the large-batch half of the small-batch/large-batch
+    critical-batch estimator (DESIGN.md §15) — no extra gradient pass.
+    """
+    g = combine_weighted(grads, batches)
+    return g, tree_sqnorm(g)
+
+
 def weighted_psum(local_grad_sum, local_weight_sum, axis_names):
     """In-graph weighted mean across mesh axes.
 
@@ -62,6 +92,23 @@ def weighted_psum(local_grad_sum, local_weight_sum, axis_names):
     )
     wsum = jax.lax.psum(local_weight_sum, axis_names)
     return jax.tree_util.tree_map(lambda g: g / jnp.maximum(wsum, 1e-8), gsum)
+
+
+def weighted_psum_with_sqnorm(local_grad_sum, local_weight_sum, axis_names):
+    """`weighted_psum` plus the squared norm of this worker's mean gradient.
+
+    The sqnorm is of the LOCAL (per-worker-slice) weighted-mean gradient —
+    i.e. |g_k|^2 where g_k is what this worker contributes before the
+    cross-worker combine — evaluated in-graph inside the shard_mapped worker
+    call (DESIGN.md §11) so the GNS estimator's per-worker moments ride the
+    existing all-reduce without an extra pass.
+    """
+    gsum = jax.tree_util.tree_map(
+        lambda g: jax.lax.psum(g, axis_names), local_grad_sum
+    )
+    wsum = jax.lax.psum(local_weight_sum, axis_names)
+    g = jax.tree_util.tree_map(lambda g: g / jnp.maximum(wsum, 1e-8), gsum)
+    return g, tree_sqnorm(g)
 
 
 def accumulate_microbatch_grads(grad_fn, params, microbatches, masks):

@@ -43,6 +43,9 @@ class WorkerSpec:
     kind: str = "cpu"                  # 'cpu' | 'gpu' | 'tpu'
     b_mem: Optional[int] = None        # batch where the memory cliff starts
     trace: Optional[Trace] = None      # dynamic availability (None = 1.0)
+    price: float = 1.0                 # relative $/hr (spot-market cost model
+    #                                    consumed by core/allocation.py's
+    #                                    cost_aware_allocation)
 
     def availability(self, t: float) -> float:
         return self.trace(t) if self.trace is not None else 1.0

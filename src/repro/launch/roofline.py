@@ -120,12 +120,73 @@ def table(results: list[dict], mesh: str = "16x16") -> str:
     return "\n".join(out)
 
 
+_RAMP_SHAPES = ("train_4k", "train_4k_x2", "train_4k_x4")
+
+
+def batch_ramp(results: list[dict], mesh: str = "16x16") -> str:
+    """Roofline view of the outer global-batch ramp (DESIGN.md §15).
+
+    The two-level controller grows B_global by up to ``max_factor`` while
+    the mesh stays fixed, so per-chip compute and HBM terms scale ~linearly
+    with the per-chip batch while the gradient all-reduce (param-sized, not
+    batch-sized) stays ~constant.  This table checks that prediction against
+    the measured ``train_4k_x2`` / ``train_4k_x4`` compiles: ``pred`` is the
+    base shape's compute term scaled by the batch ratio, ``s/ex`` is the
+    roofline bound per example — falling s/ex is the amortization the GNS
+    outer loop converts into time-to-target (gns_bench.py measures the same
+    effect end-to-end on the sim clock).
+    """
+    by_arch: dict = {}
+    for r in results:
+        if (r["status"] == "ok" and r["mesh"] == mesh
+                and r["shape"] in _RAMP_SHAPES):
+            by_arch.setdefault(r["arch"], {})[r["shape"]] = analyze(r)
+    out = ["| arch | shape | B | compute s | pred (linear) | collective s | "
+           "bound s/ex |",
+           "|---|---|---|---|---|---|---|"]
+    from repro.configs.shapes import get_shape
+
+    for arch in sorted(by_arch):
+        rows = by_arch[arch]
+        if "train_4k" not in rows:
+            continue
+        base = rows["train_4k"]
+        b0 = get_shape("train_4k").global_batch
+        for name in _RAMP_SHAPES:
+            b = get_shape(name).global_batch
+            pred = base["compute_s"] * (b / b0)
+            if name in rows:
+                r = rows[name]
+                out.append(
+                    f"| {arch} | {name} | {b} | {r['compute_s']:.3f} | "
+                    f"{pred:.3f} | {r['collective_s']:.3f} | "
+                    f"{r['bound_s'] / b * 1e3:.3f}ms |")
+            else:
+                # not compiled yet: prediction only (collectives assumed flat)
+                bound = max(pred, base["memory_s"] * (b / b0),
+                            base["collective_s"])
+                out.append(
+                    f"| {arch} | {name} | {b} | — | {pred:.3f} | "
+                    f"~{base['collective_s']:.3f} | "
+                    f"{bound / b * 1e3:.3f}ms (pred) |")
+    if len(out) == 2:
+        return ""
+    return "\n".join(out)
+
+
 def main() -> None:
     path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
     with open(path) as f:
         results = json.load(f)
     print("## Roofline (single-pod 16x16, per chip, TPU v5e constants)\n")
     print(table(results))
+    for mesh_name, label in (("16x16", "256-device pod"),
+                             ("2x16x16", "512-device multipod")):
+        ramp = batch_ramp(results, mesh=mesh_name)
+        if ramp:
+            print(f"\n## Global-batch ramp ({label}, outer-loop rungs — "
+                  f"DESIGN.md §15)\n")
+            print(ramp)
     rows = [analyze(r) for r in results
             if r["status"] == "ok" and r["mesh"] == "16x16"]
     print("\nWorst useful-compute ratios:")

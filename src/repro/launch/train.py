@@ -29,11 +29,11 @@ from repro.api import (
     lm_workload,
 )
 from repro.configs import get_config, list_architectures
-from repro.core import ControllerConfig
+from repro.core import ControllerConfig, GLOBAL_BATCH_KINDS, GlobalBatchConfig
 from repro.data import DataPipeline
 from repro.het import traces
 from repro.models import reduced
-from repro.optim import adam
+from repro.optim import adam, batch_coupled
 
 
 def main(argv=None) -> dict:
@@ -66,6 +66,23 @@ def main(argv=None) -> dict:
                          "gain-scheduled PID (DESIGN.md §3)")
     ap.add_argument("--beyond-paper", action="store_true",
                     help="zero-cost resize controller variant (DESIGN.md §2)")
+    ap.add_argument("--global-batch-kind", default="fixed",
+                    choices=list(GLOBAL_BATCH_KINDS),
+                    help="outer global-batch loop (DESIGN.md §15): 'fixed' = "
+                         "paper behaviour (B constant); 'geometric' = "
+                         "GeoDamp-style doubling schedule; 'gns' = "
+                         "gradient-noise-scale critical-batch tracking "
+                         "(bsp only); 'bandit' = epsilon-greedy over the "
+                         "rung ladder on loss-per-second reward")
+    ap.add_argument("--global-batch", type=float, default=8.0,
+                    metavar="MAX_FACTOR",
+                    help="cap for the outer loop: B may grow to at most "
+                         "MAX_FACTOR x the initial global batch")
+    ap.add_argument("--lr-couple", default="none",
+                    choices=["none", "linear", "sqrt"],
+                    help="couple the learning rate to outer global-batch "
+                         "resizes: eta <- eta0 * (B/B0) (linear) or "
+                         "* sqrt(B/B0) (sqrt); DESIGN.md §15")
     ap.add_argument("--serve", action="store_true",
                     help="co-locate a continuous-batching decode loop on "
                          "the training mesh (DESIGN.md §13): a serve slice "
@@ -119,18 +136,27 @@ def main(argv=None) -> dict:
     if args.interference:
         cluster.with_trace(-1, traces.step_interference(5.0, 1e9, 0.3))
 
+    if args.global_batch_kind == "gns" and args.sync != "bsp":
+        ap.error("--global-batch-kind gns requires --sync bsp: the GNS "
+                 "estimator needs per-round per-worker gradient moments "
+                 "(DESIGN.md §15)")
+
     pipe = DataPipeline(cfg, seq_len=args.seq_len, num_workers=args.workers,
                         seed=args.seed)
+    lr = (batch_coupled(1e-3, rule=args.lr_couple)
+          if args.lr_couple != "none" else 1e-3)
     experiment = Experiment(
         workload=lm_workload(cfg, pipe, aux_weight=0.01),
         cluster=cluster,
-        optimizer=adam(1e-3),
+        optimizer=adam(lr),
         config=TrainConfig(
             b0=args.b0, microbatch=args.microbatch, batching=args.batching,
             sync=args.sync, max_steps=args.steps, seed=args.seed,
             controller=ControllerConfig(dead_band=args.dead_band,
                                         kind=args.controller,
-                                        beyond_paper=args.beyond_paper)),
+                                        beyond_paper=args.beyond_paper),
+            global_batch=GlobalBatchConfig(kind=args.global_batch_kind,
+                                           max_factor=args.global_batch)),
     )
 
     session = experiment.session()

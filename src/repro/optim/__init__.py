@@ -8,13 +8,20 @@ from repro.optim.optimizers import (
     momentum,
     sgd,
 )
-from repro.optim.schedules import cosine_schedule, step_schedule
+from repro.optim.schedules import (
+    BatchCoupledSchedule,
+    batch_coupled,
+    cosine_schedule,
+    step_schedule,
+)
 
 __all__ = [
+    "BatchCoupledSchedule",
     "Optimizer",
     "adafactor_mini",
     "adam",
     "adamw",
+    "batch_coupled",
     "constant_lr",
     "cosine_schedule",
     "get_optimizer",

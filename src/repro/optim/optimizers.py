@@ -27,6 +27,10 @@ class Optimizer:
     name: str
     init: Callable
     update: Callable  # (params, grads, state, step) -> (params, state)
+    # The LR schedule `update` closes over, exposed so the trainer can detect
+    # a BatchCoupledSchedule and re-evaluate it on outer-controller resizes
+    # (DESIGN.md §15). None for hand-rolled optimizers that predate it.
+    schedule: Optional[Callable] = None
 
 
 def _treemap(f, *ts):
@@ -47,7 +51,7 @@ def sgd(lr: Schedule | float) -> Optimizer:
         eta = sched(step)
         return _treemap(lambda p, g: p - eta * g.astype(p.dtype), params, grads), state
 
-    return Optimizer("sgd", init, update)
+    return Optimizer("sgd", init, update, schedule=sched)
 
 
 def momentum(lr: Schedule | float, beta: float = 0.9,
@@ -70,7 +74,7 @@ def momentum(lr: Schedule | float, beta: float = 0.9,
                                        - eta * u).astype(p.dtype), params, upd)
         return new_p, new_m
 
-    return Optimizer("momentum", init, update)
+    return Optimizer("momentum", init, update, schedule=sched)
 
 
 def adam(lr: Schedule | float, b1: float = 0.9, b2: float = 0.999,
@@ -99,7 +103,8 @@ def adam(lr: Schedule | float, b1: float = 0.9, b2: float = 0.999,
 
         return _treemap(upd, params, m, v), {"m": m, "v": v}
 
-    return Optimizer("adam" if not weight_decay else "adamw", init, update)
+    return Optimizer("adam" if not weight_decay else "adamw", init, update,
+                     schedule=sched)
 
 
 def adamw(lr, weight_decay: float = 0.01, **kw) -> Optimizer:
@@ -154,7 +159,7 @@ def adafactor_mini(lr: Schedule | float, eps: float = 1e-30,
         new_s = tdef.unflatten([o[1] for o in out])
         return new_p, new_s
 
-    return Optimizer("adafactor-mini", init, update)
+    return Optimizer("adafactor-mini", init, update, schedule=sched)
 
 
 def get_optimizer(name: str, lr, **kw) -> Optimizer:

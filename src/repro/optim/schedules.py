@@ -1,8 +1,15 @@
-"""Learning-rate schedules, incl. the paper's step schedule for ResNet."""
+"""Learning-rate schedules, incl. the paper's step schedule for ResNet.
+
+`batch_coupled` wraps any schedule for two-level batch control (DESIGN.md
+§15): when the outer controller grows the global batch by a factor r, the
+learning rate scales by r (``rule="linear"``, Goyal et al.) or sqrt(r)
+(``rule="sqrt"``, Adam-family), re-evaluated on outer steps by the trainer.
+"""
 
 from __future__ import annotations
 
-from typing import Sequence
+import math
+from typing import Callable, Sequence, Union
 
 import jax.numpy as jnp
 
@@ -34,3 +41,47 @@ def cosine_schedule(peak: float, total_steps: int, warmup: int = 0,
         return jnp.where(step < warmup, peak * warm, cos)
 
     return sched
+
+
+class BatchCoupledSchedule:
+    """Schedule wrapper whose output scales with the global-batch ratio.
+
+    ``sched(step) = scale * base(step)`` where ``scale`` is set by the
+    trainer on every outer-controller resize via :meth:`set_batch_ratio`
+    (ratio = B_global / B_global_initial): ``rule="linear"`` uses the ratio
+    itself, ``rule="sqrt"`` its square root.
+
+    The scale is a HOST float, deliberately: `jax.jit` bakes it into the
+    compiled program at trace time, so the trainer keeps one jitted
+    optimizer-update per distinct scale (bounded by the number of ladder
+    rungs) and swaps between them on resizes — see the `_couple_lr` path in
+    `repro.train.loop`.
+    """
+
+    RULES = ("linear", "sqrt")
+
+    def __init__(self, base: Union[Callable, float], rule: str = "linear"):
+        if rule not in self.RULES:
+            raise ValueError(f"unknown coupling rule {rule!r}; expected {self.RULES}")
+        if not callable(base):
+            lr = float(base)
+            base = lambda step: jnp.asarray(lr, jnp.float32)  # noqa: E731
+        self.base = base
+        self.rule = rule
+        self.scale = 1.0
+
+    def set_batch_ratio(self, ratio: float) -> float:
+        """Update the scale for a new B/B0 ratio; returns the new scale."""
+        if ratio <= 0:
+            raise ValueError(f"batch ratio must be positive, got {ratio}")
+        self.scale = float(ratio) if self.rule == "linear" else math.sqrt(ratio)
+        return self.scale
+
+    def __call__(self, step):
+        return self.scale * self.base(step)
+
+
+def batch_coupled(base_sched: Union[Callable, float],
+                  rule: str = "linear") -> BatchCoupledSchedule:
+    """Couple any LR schedule (or constant) to the outer batch controller."""
+    return BatchCoupledSchedule(base_sched, rule)

@@ -36,14 +36,23 @@ import numpy as np
 
 from repro.core import (
     ControllerConfig,
+    GlobalBatchConfig,
+    GradStats,
     accumulate_microbatch_grads,
     combine_weighted,
+    combine_weighted_with_sqnorm,
+    cost_aware_allocation,
+    global_batch_from_state_dict,
+    largest_remainder_round,
     make_controller,
+    make_global_controller,
     plan_microbatches,
     static_allocation,
+    tree_sqnorm,
 )
 from repro.het.simulator import ClusterSim
 from repro.optim.optimizers import Optimizer
+from repro.optim.schedules import BatchCoupledSchedule
 from repro.train.engine import EventEngine
 
 
@@ -56,6 +65,8 @@ class TrainConfig:
     sync: str = "bsp"                # 'bsp' | 'asp'
     controller: ControllerConfig = dataclasses.field(
         default_factory=ControllerConfig)
+    global_batch: GlobalBatchConfig = dataclasses.field(
+        default_factory=GlobalBatchConfig)
     max_steps: int = 1000
     target_loss: Optional[float] = None
     loss_ewma: float = 0.1           # smoothing for the stop criterion
@@ -90,6 +101,15 @@ class TrainConfig:
         if not (0.0 < self.loss_ewma <= 1.0):
             raise ValueError(
                 f"loss_ewma must be in (0, 1], got {self.loss_ewma}")
+        if not isinstance(self.global_batch, GlobalBatchConfig):
+            raise TypeError(
+                f"global_batch must be a GlobalBatchConfig, "
+                f"got {type(self.global_batch).__name__}")
+        if self.global_batch.kind == "gns" and self.sync != "bsp":
+            raise ValueError(
+                "global_batch kind='gns' estimates the noise scale from "
+                "per-worker gradient moments of one BSP round; use "
+                "sync='bsp' ('geometric'/'bandit' also run on ASP)")
 
 
 @dataclasses.dataclass
@@ -104,7 +124,103 @@ class StepRecord:
     worker_times: Optional[list] = None   # per-worker times (BSP rounds)
 
 
-class HeterogeneousTrainer:
+class OuterBatchMixin:
+    """Two-level batch control glue shared by the sim and mesh trainers.
+
+    Owns the outer B_global controller (DESIGN.md §15): construction (only
+    for non-'fixed' kinds, so the fixed path stays bit-for-bit the
+    pre-existing code), applying resizes through the inner controller's
+    `set_global_batch`, coupling the LR schedule to the batch ratio, and
+    checkpoint serde.  Host-side only; expects the host class to provide
+    ``cfg``, ``batches``, ``controller``, ``optimizer``, ``k``, and
+    ``_opt_update`` / ``_opt_jit_cache``.
+    """
+
+    outer = None
+
+    def _init_outer(self) -> None:
+        """Construct the outer controller (call once batches/controller exist).
+
+        The ladder quantum is 1 so rung 0 equals the exact initial global
+        batch — the first resize, not construction, is the first deviation
+        from the fixed-batch trajectory.
+        """
+        cfg = self.cfg
+        self.outer = None
+        self._need_grad_stats = cfg.global_batch.needs_grad_stats
+        if cfg.global_batch.kind == "fixed":
+            return
+        self.outer = make_global_controller(
+            cfg.global_batch, b0=sum(self.batches), quantum=1)
+        sched = getattr(self.optimizer, "schedule", None)
+        if isinstance(sched, BatchCoupledSchedule):
+            # reset a (possibly reused) coupled schedule to ratio 1 BEFORE
+            # the first trace: jit bakes the host-float scale at trace time
+            sched.set_batch_ratio(1.0)
+            self._opt_jit_cache[1.0] = self._opt_update
+
+    def _apply_global_batch(self, total: int) -> list[int]:
+        """Commit an outer resize: rescale the split, re-couple the LR."""
+        if self.controller is not None:
+            self.batches = list(self.controller.set_global_batch(total))
+        else:
+            cur = sum(self.batches)
+            self.batches = largest_remainder_round(
+                [b * total / max(cur, 1) for b in self.batches],
+                int(total), lo=1)
+        self._couple_lr(total)
+        return self.batches
+
+    def _couple_lr(self, total: int) -> None:
+        """Re-evaluate a batch-coupled LR schedule at the new B_global.
+
+        jax.jit bakes the schedule's host-float scale into the compiled
+        update at trace time, so each distinct scale gets its own jitted
+        wrapper, cached — the cache (and hence the recompiles) is bounded by
+        the number of ladder rungs.
+        """
+        if self.outer is None:
+            return
+        sched = getattr(self.optimizer, "schedule", None)
+        if not isinstance(sched, BatchCoupledSchedule):
+            return
+        sched.set_batch_ratio(total / self.outer.b0)
+        key = round(sched.scale, 12)
+        if key not in self._opt_jit_cache:
+            # a FRESH function object per scale: jax.jit keys its trace
+            # cache on the wrapped callable, so jitting the same bound
+            # `update` again would silently reuse the trace that baked the
+            # old scale instead of re-reading sched.scale
+            upd = self.optimizer.update
+            self._opt_jit_cache[key] = jax.jit(
+                lambda p, g, s, t, _u=upd: _u(p, g, s, t))
+        self._opt_update = self._opt_jit_cache[key]
+
+    def _observe_outer(self, *, loss: float, seconds: float,
+                       sqnorms=None, pre_batches=None,
+                       combined_sqnorm=None) -> bool:
+        """Feed the outer controller one step; apply a resize if it fires."""
+        if self.outer is None:
+            return False
+        stats = None
+        if self._need_grad_stats and sqnorms is not None:
+            stats = GradStats(per_worker_sqnorm=list(sqnorms),
+                              batches=list(pre_batches),
+                              combined_sqnorm=float(combined_sqnorm))
+        new_total = self.outer.observe(loss=loss, seconds=seconds, stats=stats)
+        if new_total is None:
+            return False
+        self._apply_global_batch(new_total)
+        return True
+
+    def load_outer_state(self, state: dict) -> None:
+        """Rebuild the outer controller from a checkpoint payload."""
+        self.outer = global_batch_from_state_dict(state)
+        self._need_grad_stats = self.outer.config.needs_grad_stats
+        self._couple_lr(self.outer.b_global)
+
+
+class HeterogeneousTrainer(OuterBatchMixin):
     """Drives (loss_and_grad, next_batch, optimizer) under simulated heterogeneity.
 
     loss_and_grad(params, batch, mask) -> ((loss_sum, w_sum, aux), grads)
@@ -144,8 +260,10 @@ class HeterogeneousTrainer:
         self.params = init_params(key)
         self.opt_state = optimizer.init(self.params)
         self.step_idx = 0
+        self._need_grad_stats = cfg.global_batch.needs_grad_stats
         self._accum = self._build_accum(loss_and_grad)
         self._opt_update = jax.jit(optimizer.update)
+        self._opt_jit_cache = {}  # LR-coupling: one jitted update per scale
         self.history: list[StepRecord] = []
         self.recompiles = 0
         self.accum_calls = 0      # jitted executions (one per worker step)
@@ -155,11 +273,23 @@ class HeterogeneousTrainer:
         self.controller = None
         if cfg.batching == "dynamic":
             self.controller = make_controller(self.batches, cfg.controller)
+        self._init_outer()
+        self._outer_last_time = self.sim.time
 
     # ------------------------------------------------------------- planning
 
     def _initial_batches(self) -> list[int]:
         cfg = self.cfg
+        if cfg.batching == "dynamic" and cfg.global_batch.kind != "fixed":
+            # the outer controller's initial B_global goes through the
+            # price/capacity-aware allocator (DESIGN.md §15) instead of the
+            # uniform fallback: same RNG-free peek throughputs, plus each
+            # worker's memory-cliff capacity and spot price from its spec
+            xput = [self.sim.peek_throughput(i, cfg.b0) for i in range(self.k)]
+            return cost_aware_allocation(
+                xput, self.k * cfg.b0,
+                capacities=[w.b_mem for w in self.sim.workers],
+                prices=[w.price for w in self.sim.workers])
         if cfg.batching == "uniform" or (
             cfg.batching == "dynamic" and cfg.init_allocation == "uniform"
         ):
@@ -188,6 +318,10 @@ class HeterogeneousTrainer:
             # mean gradient over the worker's examples (divide ONCE)
             g_mean = jax.tree_util.tree_map(
                 lambda g: g / jnp.maximum(w_sum, 1e-9), g_sum)
+            if self._need_grad_stats:
+                # |g_k|^2 side stat for the GNS estimator, inside the same
+                # compiled call — estimation costs no extra pass
+                return g_mean, loss_sum, w_sum, tree_sqnorm(g_mean)
             return g_mean, loss_sum, w_sum
 
         # donation is a no-op (with a warning) on CPU; only ask for it where
@@ -204,23 +338,39 @@ class HeterogeneousTrainer:
             lambda x: jnp.reshape(x, (plan.n_steps, cfg.microbatch)
                                   + x.shape[1:]), data)
         masks = jnp.asarray(plan.masks())
-        g_mean, loss_sum, w_sum = self._accum(self.params, stacked, masks)
+        out = self._accum(self.params, stacked, masks)
         self.accum_calls += 1
         # single device->host transfer per worker step (g_mean stays on device)
-        ls, ws = jax.device_get((loss_sum, w_sum))
+        if self._need_grad_stats:
+            g_mean, loss_sum, w_sum, sqn = out
+            ls, ws, sq = jax.device_get((loss_sum, w_sum, sqn))
+            self._last_sqnorm = float(sq)
+        else:
+            g_mean, loss_sum, w_sum = out
+            ls, ws = jax.device_get((loss_sum, w_sum))
+            self._last_sqnorm = None
         return g_mean, float(ls), float(ws)
 
     # ------------------------------------------------------------------ BSP
 
     def bsp_step(self) -> StepRecord:
         grads, losses, weights = [], 0.0, 0.0
+        pre_batches = list(self.batches)
+        sqnorms = []
         for k in range(self.k):
             g, ls, ws = self._worker_grad(k, self.batches[k])
             grads.append(g)
             losses += ls
             weights += ws
+            if self._need_grad_stats:
+                sqnorms.append(self._last_sqnorm)
         # Eq. 2-3: lambda-weighted combine
-        g = combine_weighted(grads, self.batches)
+        if self._need_grad_stats:
+            g, g_sqnorm = combine_weighted_with_sqnorm(grads, self.batches)
+            g_sqnorm = float(g_sqnorm)
+        else:
+            g = combine_weighted(grads, self.batches)
+            g_sqnorm = None
         self.params, self.opt_state = self._opt_update(
             self.params, g, self.opt_state, jnp.asarray(self.step_idx))
         info = self.engine.bsp_round(self.batches)
@@ -229,6 +379,12 @@ class HeterogeneousTrainer:
             upd = self.controller.observe(info["worker_times"])
             adjusted = upd.updated
             self.batches = upd.batches
+        if self._observe_outer(
+                loss=losses / max(weights, 1e-9),
+                seconds=info["iteration_time"],
+                sqnorms=sqnorms or None, pre_batches=pre_batches,
+                combined_sqnorm=g_sqnorm):
+            adjusted = True
         rec = StepRecord(
             step=self.step_idx,
             sim_time=self.sim.time,
@@ -278,6 +434,15 @@ class HeterogeneousTrainer:
             upd = self.controller.observe(times)
             adjusted = upd.updated
             self.batches = upd.batches
+        if self.outer is not None and eng.version % self.k == 0:
+            # outer cadence matches the inner one: every K pushed versions
+            # (~one whole-cluster sweep); gns is BSP-only (config-validated),
+            # so no stats here — seconds are the simulated span of the sweep
+            elapsed = self.sim.time - self._outer_last_time
+            self._outer_last_time = self.sim.time
+            if self._observe_outer(loss=ls / max(ws, 1e-9),
+                                   seconds=max(elapsed, 0.0)):
+                adjusted = True
         rec = StepRecord(
             step=self.step_idx, sim_time=self.sim.time,
             iteration_time=float(ev.time), loss=ls / max(ws, 1e-9),
@@ -310,6 +475,8 @@ class HeterogeneousTrainer:
             "wall_time": _time.perf_counter() - wall0,
             "batch_adjustments": (self.controller.num_updates
                                   if self.controller else 0),
+            "outer_resizes": (self.outer.num_resizes
+                              if self.outer is not None else 0),
             "history": self.history,
             "final_batches": list(self.batches),
         }

@@ -83,17 +83,19 @@ from repro.core import (
     bucket_up,
     carve_serve,
     combine_weighted,
+    combine_weighted_with_sqnorm,
+    cost_aware_allocation,
     largest_remainder_round,
     make_controller,
     plan_slices,
     static_allocation,
 )
-from repro.core.grad import weighted_psum
+from repro.core.grad import weighted_psum, weighted_psum_with_sqnorm
 from repro.het.simulator import WorkerSpec
 from repro.launch.mesh import data_axes
 from repro.optim.optimizers import Optimizer
 from repro.train.engine import EventEngine
-from repro.train.loop import StepRecord, TrainConfig
+from repro.train.loop import OuterBatchMixin, StepRecord, TrainConfig
 
 
 class _MeasuredTimeModel:
@@ -215,7 +217,7 @@ def _ready_timestamp(out) -> float:
     return _time.perf_counter()
 
 
-class MeshTrainer:
+class MeshTrainer(OuterBatchMixin):
     """Drives the dynamic-batching loop on a real JAX mesh (BSP + ASP).
 
     Presents the same surface as :class:`HeterogeneousTrainer` to
@@ -307,6 +309,9 @@ class MeshTrainer:
         self._flat_devices = dev.reshape(
             (self.data_extent,) + dev.shape[len(didx):])
         self._full_replicated = NamedSharding(mesh, P())
+        # must precede _reconfigure_execution: _make_exec's worker_fn adds a
+        # fourth |g_k|^2 output (DESIGN.md §15) when grad stats are needed
+        self._need_grad_stats = cfg.global_batch.needs_grad_stats
         self._want_concurrent = bool(concurrent)
         self.concurrent = False
         self.slice_plan: Optional[SlicePlan] = None
@@ -319,11 +324,14 @@ class MeshTrainer:
         self.time_model = _MeasuredTimeModel(self.k, time_alpha)
         self.sim = self.time_model   # Session/metrics read trainer.sim.time
         self._opt_update = jax.jit(optimizer.update)
+        self._opt_jit_cache = {}  # LR-coupling: one jitted update per scale
         self.batches = self._initial_batches()
         self.engine = EventEngine(self.time_model)
         self.controller = None
         if cfg.batching == "dynamic":
             self.controller = make_controller(self.batches, cfg.controller)
+        self._init_outer()
+        self._outer_last_time = self.time_model.time
 
     # ----------------------------------------------------- execution setup
 
@@ -342,10 +350,18 @@ class MeshTrainer:
         bucket_base = quantum * -(-self.cfg.microbatch // quantum)
         loss_and_grad = self._loss_and_grad
 
+        need_stats = self._need_grad_stats
+
         def worker_fn(params, batch, mask):
             self.accum_traces += 1  # python side effect: runs at trace time
             (loss_sum, w_sum, _aux), grads = loss_and_grad(
                 params, batch, mask)
+            if need_stats:
+                # |g_k|^2 side stat for the GNS estimator rides the
+                # existing psum call (DESIGN.md §15) — no extra pass
+                g_mean, sqn = weighted_psum_with_sqnorm(grads, w_sum, daxes)
+                return (g_mean, jax.lax.psum(loss_sum, daxes),
+                        jax.lax.psum(w_sum, daxes), sqn)
             g_mean = weighted_psum(grads, w_sum, daxes)
             return (g_mean, jax.lax.psum(loss_sum, daxes),
                     jax.lax.psum(w_sum, daxes))
@@ -353,7 +369,7 @@ class MeshTrainer:
         sharded = shard_map(
             worker_fn, mesh_obj,
             in_specs=(P(), P(daxes), P(daxes)),
-            out_specs=(P(), P(), P()),
+            out_specs=(P(), P(), P(), P()) if need_stats else (P(), P(), P()),
             # grads ARE replicated over non-data axes (identical inputs and
             # deterministic compute per slice); 0.4's static rep-checker
             # cannot always prove it, so the check is off
@@ -452,8 +468,11 @@ class MeshTrainer:
 
     def _initial_batches(self) -> list[int]:
         cfg = self.cfg
+        outer_active = (cfg.batching == "dynamic"
+                        and cfg.global_batch.kind != "fixed")
         if cfg.batching == "uniform" or (
             cfg.batching == "dynamic" and cfg.init_allocation == "uniform"
+            and not outer_active
         ):
             return [cfg.b0] * self.k
         # open-loop init on real hardware: a PROBE round (one measured step
@@ -466,6 +485,13 @@ class MeshTrainer:
             t = self._measured_worker_grad(k, cfg.b0)[3]
             self.time_model.observe(k, cfg.b0, t)
             times.append(t)
+        if outer_active:
+            # the outer controller's initial B_global goes through the
+            # price/capacity-aware allocator (DESIGN.md §15); real hardware
+            # exposes no memory-cliff capacities or spot prices, so this
+            # reduces to the measured-throughput split of K*b0
+            return cost_aware_allocation(
+                [cfg.b0 / t for t in times], self.k * cfg.b0)
         return static_allocation([cfg.b0 / t for t in times], cfg.b0)
 
     # ------------------------------------------------------------ gradients
@@ -543,7 +569,8 @@ class MeshTrainer:
         dt = _time.perf_counter() - d.t0
         if d.fresh_trace:
             dt = self._solo_rerun(d)
-        g_mean, loss_sum, w_sum = d.out
+        g_mean, loss_sum, w_sum = d.out[:3]
+        self._last_sqnorm = float(d.out[3]) if len(d.out) > 3 else None
         return (g_mean, float(loss_sum), float(w_sum),
                 dt * self.dilation[worker])
 
@@ -593,30 +620,34 @@ class MeshTrainer:
         # once (benchmarks/backend_bench.py asserts this)
         self.last_round_stamps = [(d.t0, done)
                                   for d, done in zip(dispatches, stamps)]
-        grads, losses, weights, raw_times = [], 0.0, 0.0, []
+        grads, losses, weights, raw_times, sqnorms = [], 0.0, 0.0, [], []
         for d, done in zip(dispatches, stamps):
             dt = done - d.t0
             if d.fresh_trace:
                 dt = self._solo_rerun(d)
-            g_mean, loss_sum, w_sum = d.out
+            g_mean, loss_sum, w_sum = d.out[:3]
             # slice-committed grads must rejoin the full mesh before the
             # driver-side lambda combine
             grads.append(jax.device_put(g_mean, self._full_replicated))
             losses += float(loss_sum)
             weights += float(w_sum)
             raw_times.append(dt * self.dilation[d.worker])
-        return grads, losses, weights, raw_times
+            if len(d.out) > 3:
+                sqnorms.append(float(d.out[3]))
+        return grads, losses, weights, raw_times, sqnorms
 
     def _round_sequential(self):
         """Fallback: time-multiplex the full data axis (sum-of-workers)."""
-        grads, losses, weights, raw_times = [], 0.0, 0.0, []
+        grads, losses, weights, raw_times, sqnorms = [], 0.0, 0.0, [], []
         for k in range(self.k):
             g, ls, ws, dt = self._measured_worker_grad(k, self.batches[k])
             grads.append(g)
             losses += ls
             weights += ws
             raw_times.append(dt)
-        return grads, losses, weights, raw_times
+            if self._last_sqnorm is not None:
+                sqnorms.append(self._last_sqnorm)
+        return grads, losses, weights, raw_times, sqnorms
 
     def _charge_interference(self, raw_times: list[float]) -> list[float]:
         """Hook: the co-located trainer (DESIGN.md §13) adds measured decode
@@ -626,16 +657,24 @@ class MeshTrainer:
         return raw_times
 
     def bsp_step(self) -> StepRecord:
+        pre_batches = list(self.batches)
         if self.concurrent and self.k > 1:
-            grads, losses, weights, raw_times = self._round_concurrent()
+            grads, losses, weights, raw_times, sqnorms = \
+                self._round_concurrent()
         else:
-            grads, losses, weights, raw_times = self._round_sequential()
+            grads, losses, weights, raw_times, sqnorms = \
+                self._round_sequential()
         raw_times = self._charge_interference(raw_times)
         smoothed = [self._observe_time(k, t) for k, t in enumerate(raw_times)]
         for k, t in enumerate(raw_times):
             self.time_model.observe(k, self.batches[k], t)
         # Eq. 2-3: lambda-weighted combine (identical to the sim path)
-        g = combine_weighted(grads, self.batches)
+        if self._need_grad_stats:
+            g, g_sqnorm = combine_weighted_with_sqnorm(grads, self.batches)
+            g_sqnorm = float(g_sqnorm)
+        else:
+            g = combine_weighted(grads, self.batches)
+            g_sqnorm = None
         if self.reserve and not self.concurrent:
             # fallback grads live on the train-region submesh (the serve
             # reserve is excluded); rejoin the full mesh so params stay
@@ -654,6 +693,15 @@ class MeshTrainer:
             upd = self.controller.observe(smoothed)
             adjusted = upd.updated
             self.batches = upd.batches
+        if self._observe_outer(
+                loss=losses / max(weights, 1e-9),
+                seconds=info["iteration_time"],
+                sqnorms=sqnorms or None, pre_batches=pre_batches,
+                combined_sqnorm=g_sqnorm):
+            # a B_global resize needs NO slice replan: slices keep their
+            # widths, each worker's grown batch just walks its own bucket
+            # ladder — the §11 recompile bound is the ladder length
+            adjusted = True
         rec = StepRecord(
             step=self.step_idx,
             sim_time=self.time_model.time,
@@ -711,6 +759,14 @@ class MeshTrainer:
             upd = self.controller.observe(times)
             adjusted = upd.updated
             self.batches = upd.batches
+        if self.outer is not None and eng.version % self.k == 0:
+            # same cadence as the inner observe (~one whole-cluster sweep);
+            # gns is BSP-only (config-validated), so no stats here
+            elapsed = self.time_model.time - self._outer_last_time
+            self._outer_last_time = self.time_model.time
+            if self._observe_outer(loss=ls / max(ws, 1e-9),
+                                   seconds=max(elapsed, 0.0)):
+                adjusted = True
         rec = StepRecord(
             step=self.step_idx, sim_time=self.time_model.time,
             iteration_time=float(ev.time), loss=ls / max(ws, 1e-9),

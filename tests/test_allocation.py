@@ -5,6 +5,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     cores_proportional_allocation,
+    cost_aware_allocation,
     flops_proportional_allocation,
     largest_remainder_round,
     static_allocation,
@@ -64,3 +65,80 @@ def test_largest_remainder_hits_total(vals, data):
     out = largest_remainder_round(vals, total, lo=lo)
     assert sum(out) == total
     assert all(v >= lo for v in out)
+
+
+# ------------------------------------------------- cost-aware (DESIGN.md §15)
+
+
+def test_cost_aware_reduces_to_proportional():
+    xput = [3.0, 5.0, 12.0]
+    assert (cost_aware_allocation(xput, 96)
+            == static_allocation(xput, 32))
+
+
+def test_cost_aware_capacity_clamp_redistributes():
+    # worker 2 would take ~60 of 96 proportionally but caps at 20; the
+    # surplus flows to the others, conserving the requested total
+    b = cost_aware_allocation([3.0, 5.0, 12.0], 96,
+                              capacities=[None, None, 20])
+    assert sum(b) == 96
+    assert b[2] == 20
+    assert b[0] < b[1]  # redistribution stays throughput-weighted
+
+
+def test_cost_aware_price_prefers_cheap_capacity():
+    # equal throughput, worker 0 saturates; of the two headroom workers the
+    # cheaper one absorbs more of the surplus
+    cheap_last = cost_aware_allocation([4.0, 4.0, 4.0], 48,
+                                       capacities=[4, None, None],
+                                       prices=[1.0, 3.0, 1.0])
+    assert sum(cheap_last) == 48
+    assert cheap_last[0] == 4
+    assert cheap_last[2] > cheap_last[1]
+    # flipping the prices flips the split
+    flipped = cost_aware_allocation([4.0, 4.0, 4.0], 48,
+                                    capacities=[4, None, None],
+                                    prices=[1.0, 1.0, 3.0])
+    assert flipped[1] > flipped[2]
+
+
+def test_cost_aware_all_saturated_relaxes():
+    # total exceeds every capacity: bounds relax rather than fail, and the
+    # plan still conserves the requested global batch
+    b = cost_aware_allocation([1.0, 1.0], 100, capacities=[10, 10])
+    assert sum(b) == 100
+
+
+def test_cost_aware_validation():
+    with pytest.raises(ValueError):
+        cost_aware_allocation([], 10)
+    with pytest.raises(ValueError):
+        cost_aware_allocation([1.0, -1.0], 10)
+    with pytest.raises(ValueError):
+        cost_aware_allocation([1.0, 1.0], 1)  # < b_min * k
+    with pytest.raises(ValueError):
+        cost_aware_allocation([1.0, 1.0], 10, capacities=[4])
+    with pytest.raises(ValueError):
+        cost_aware_allocation([1.0, 1.0], 10, capacities=[0, 4])
+    with pytest.raises(ValueError):
+        cost_aware_allocation([1.0, 1.0], 10, prices=[1.0])
+    with pytest.raises(ValueError):
+        cost_aware_allocation([1.0, 1.0], 10, prices=[1.0, 0.0])
+
+
+@given(
+    xput=st.lists(st.floats(0.01, 1000.0), min_size=1, max_size=10),
+    data=st.data(),
+)
+@settings(max_examples=80, deadline=None)
+def test_cost_aware_conserves_total(xput, data):
+    k = len(xput)
+    total = data.draw(st.integers(k, k * 64))
+    caps = data.draw(st.lists(
+        st.one_of(st.just(None), st.integers(1, 128)),
+        min_size=k, max_size=k))
+    prices = data.draw(st.lists(st.floats(0.1, 10.0),
+                                min_size=k, max_size=k))
+    b = cost_aware_allocation(xput, total, capacities=caps, prices=prices)
+    assert sum(b) == total
+    assert all(x >= 1 for x in b)

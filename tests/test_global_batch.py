@@ -1,0 +1,455 @@
+"""Two-level batch control tests (DESIGN.md §15): GNS estimator recovery,
+outer-controller rung/hysteresis/slew behaviour, the fixed-kind bit-for-bit
+golden, `set_global_batch` conservation, LR coupling, checkpoint serde, and
+elastic membership preserving the outer EWMA state."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ClusterSpec,
+    Experiment,
+    TrainConfig,
+    paper_workload,
+)
+from repro.core import (
+    ControllerConfig,
+    GlobalBatchConfig,
+    GNSEstimator,
+    GradStats,
+    global_batch_from_state_dict,
+    make_controller,
+    make_global_controller,
+)
+from repro.core.control.global_batch.outer import (
+    BanditGlobalBatch,
+    GNSGlobalBatch,
+)
+from repro.het import WORKLOADS, ClusterSim, hlevel_cluster
+from repro.optim import BatchCoupledSchedule, batch_coupled, sgd
+from repro.train import ElasticTrainer
+
+
+# ------------------------------------------------------------- GNS estimator
+
+
+def _synthetic_stats(rng, batches, g_true, s_per_example):
+    """Per-worker mean gradients g_k = G + eps_k with Var(eps_k) = S/b_k
+    per coordinate-sum, plus the lambda-weighted combine."""
+    d = g_true.shape[0]
+    grads = [
+        g_true + rng.normal(0.0, math.sqrt(s_per_example / (b * d)), size=d)
+        for b in batches
+    ]
+    total = sum(batches)
+    combined = sum((b / total) * g for b, g in zip(batches, grads))
+    return GradStats(
+        per_worker_sqnorm=[float(g @ g) for g in grads],
+        batches=list(batches),
+        combined_sqnorm=float(combined @ combined),
+    )
+
+
+def test_estimator_recovers_known_noise_scale():
+    rng = np.random.default_rng(0)
+    d = 256
+    g_true = rng.normal(size=d)
+    g_true *= 2.0 / np.linalg.norm(g_true)          # |G|^2 = 4
+    s = 80.0                                        # b_noise = 80/4 = 20
+    est = GNSEstimator(alpha=0.05, min_samples=8)
+    for _ in range(400):
+        est.observe(_synthetic_stats(rng, [6, 10, 16], g_true, s))
+    assert est.ready
+    assert est.b_noise == pytest.approx(s / 4.0, rel=0.35)
+    assert est.g2_ewma == pytest.approx(4.0, rel=0.25)
+    assert est.s_ewma == pytest.approx(s, rel=0.25)
+
+
+def test_estimator_single_worker_never_ready():
+    est = GNSEstimator(min_samples=1)
+    for _ in range(10):
+        est.observe(GradStats([4.0], [8], 3.5))     # K=1: singular system
+    assert not est.ready
+    assert est.b_noise is None
+
+
+def test_estimator_skips_nonfinite_and_roundtrips():
+    est = GNSEstimator(alpha=0.5, min_samples=2)
+    est.observe(GradStats([float("nan"), 2.0], [4, 4], 1.0))
+    assert est.samples == 0
+    est.observe(GradStats([3.0, 2.0], [4, 4], 1.5))
+    est.observe(GradStats([3.1, 2.2], [4, 4], 1.4))
+    clone = GNSEstimator.from_state_dict(est.state_dict())
+    assert clone.state_dict() == est.state_dict()
+    assert clone.b_noise == est.b_noise
+
+
+def test_estimator_validation():
+    with pytest.raises(ValueError):
+        GNSEstimator(alpha=0.0)
+    with pytest.raises(ValueError):
+        GNSEstimator(min_samples=0)
+    with pytest.raises(ValueError):
+        GNSEstimator().observe(GradStats([1.0], [4, 4], 1.0))
+
+
+# ----------------------------------------------------------- config validity
+
+
+@pytest.mark.parametrize("kw", [
+    dict(kind="adaptive"),
+    dict(max_factor=0.5),
+    dict(ladder_growth=1.0),
+    dict(warmup=-1),
+    dict(max_rungs_per_resize=0),
+    dict(geo_factor=1.0),
+    dict(geo_every=0),
+    dict(gns_alpha=1.5),
+    dict(gns_min_samples=0),
+    dict(hysteresis=-0.1),
+    dict(epsilon=1.5),
+    dict(bandit_window=0),
+])
+def test_config_rejects_invalid(kw):
+    with pytest.raises(ValueError):
+        GlobalBatchConfig(**kw)
+
+
+def test_trainconfig_validates_global_batch():
+    with pytest.raises(TypeError):
+        TrainConfig(global_batch={"kind": "gns"})
+    with pytest.raises(ValueError):
+        TrainConfig(sync="asp",
+                    global_batch=GlobalBatchConfig(kind="gns"))
+    # geometric/bandit are fine under ASP (no per-round grad stats needed)
+    TrainConfig(sync="asp", global_batch=GlobalBatchConfig(kind="geometric"))
+
+
+# -------------------------------------------------------- outer ladder logic
+
+
+def test_rung_zero_is_exact_initial_batch():
+    for b0 in (7, 24, 100):
+        ctrl = make_global_controller(
+            GlobalBatchConfig(kind="geometric"), b0=b0)
+        assert ctrl.rungs[0] == b0
+        assert ctrl.b_global == b0
+        assert ctrl.rungs[-1] <= math.ceil(8.0 * b0)
+
+
+def test_geometric_walks_ladder_with_slew_and_cooldown():
+    cfg = GlobalBatchConfig(kind="geometric", geo_factor=8.0, geo_every=1,
+                            warmup=3, cooldown=2, max_rungs_per_resize=1)
+    ctrl = make_global_controller(cfg, b0=16)
+    resized_at = []
+    for step in range(1, 21):
+        if ctrl.observe(loss=1.0, seconds=0.1) is not None:
+            resized_at.append(step)
+    # warmup gates the first resize; cooldown spaces the rest; slew limits
+    # each resize to one rung even though the ideal jumps 8x immediately
+    assert resized_at[0] >= 3
+    assert all(b - a >= 2 for a, b in zip(resized_at, resized_at[1:]))
+    for step, b in ctrl.resize_log:
+        assert b in ctrl.rungs
+    rungs_hit = [ctrl.rungs.index(b) for _, b in ctrl.resize_log]
+    assert all(j - i == 1 for i, j in zip(rungs_hit, rungs_hit[1:]))
+
+
+def _primed_gns(b0=24, **kw):
+    kw.setdefault("warmup", 0)
+    kw.setdefault("cooldown", 0)
+    ctrl = make_global_controller(
+        GlobalBatchConfig(kind="gns", gns_min_samples=1, **kw), b0=b0)
+    return ctrl
+
+
+def _force_estimate(ctrl, b_noise):
+    ctrl.estimator.g2_ewma = 1.0
+    ctrl.estimator.s_ewma = float(b_noise)
+    ctrl.estimator.samples = ctrl.estimator.min_samples
+
+
+def test_gns_hysteresis_band_holds():
+    ctrl = _primed_gns(b0=24, hysteresis=0.25)
+    # inside the band: 24*(1-h) < 28 < 24*(1+h) -> hold
+    _force_estimate(ctrl, 28.0)
+    assert ctrl.observe(loss=1.0, seconds=0.1) is None
+    # above the band -> grow exactly one rung
+    _force_estimate(ctrl, 40.0)
+    assert ctrl.observe(loss=1.0, seconds=0.1) == ctrl.rungs[1]
+    # far above -> still one rung per observe (slew limit)
+    _force_estimate(ctrl, 24.0 * 8)
+    assert ctrl.observe(loss=1.0, seconds=0.1) == ctrl.rungs[2]
+
+
+def test_gns_shrink_respects_allow_shrink():
+    grow = _primed_gns(b0=24, hysteresis=0.1)
+    _force_estimate(grow, 400.0)
+    for _ in range(4):
+        grow.observe(loss=1.0, seconds=0.1)
+    assert grow.rung == 4
+    _force_estimate(grow, 24.0)                     # noise collapsed
+    assert grow.observe(loss=1.0, seconds=0.1) == grow.rungs[3]
+
+    frozen = _primed_gns(b0=24, hysteresis=0.1, allow_shrink=False)
+    _force_estimate(frozen, 400.0)
+    frozen.observe(loss=1.0, seconds=0.1)
+    _force_estimate(frozen, 1.0)
+    assert frozen.observe(loss=1.0, seconds=0.1) is None
+
+
+def test_gns_vanishing_gradient_saturates_grow():
+    ctrl = _primed_gns(b0=24)
+    ctrl.estimator.g2_ewma = -0.5                   # noisy estimate went <= 0
+    ctrl.estimator.s_ewma = 5.0
+    ctrl.estimator.samples = 99
+    assert ctrl.estimator.b_noise == math.inf       # "grow at any batch"
+    assert ctrl.observe(loss=1.0, seconds=0.1) == ctrl.rungs[1]
+
+
+def test_bandit_is_seed_deterministic_and_stays_on_rungs():
+    def drive(ctrl, n=60):
+        path = []
+        for i in range(n):
+            out = ctrl.observe(loss=1.0 / (i + 1), seconds=0.05)
+            if out is not None:
+                path.append(out)
+        return path
+
+    cfg = GlobalBatchConfig(kind="bandit", warmup=2, cooldown=1,
+                            bandit_window=3, epsilon=0.5, seed=7)
+    a = drive(make_global_controller(cfg, b0=16))
+    b = drive(make_global_controller(cfg, b0=16))
+    assert a == b and a, "same seed must explore identically"
+    ctrl = make_global_controller(cfg, b0=16)
+    for bsz in drive(ctrl):
+        assert bsz in ctrl.rungs
+
+
+def test_outer_state_roundtrip_all_kinds():
+    for kind in ("fixed", "geometric", "gns", "bandit"):
+        ctrl = make_global_controller(
+            GlobalBatchConfig(kind=kind, warmup=1, cooldown=1,
+                              bandit_window=2), b0=24)
+        if isinstance(ctrl, GNSGlobalBatch):
+            _force_estimate(ctrl, 100.0)
+        for i in range(8):
+            ctrl.observe(loss=1.0 / (i + 1), seconds=0.1)
+        clone = global_batch_from_state_dict(ctrl.state_dict())
+        assert clone.state_dict() == ctrl.state_dict()
+        # the clone must CONTINUE identically, not just compare equal
+        if isinstance(ctrl, BanditGlobalBatch):
+            seq_a = [ctrl.observe(loss=0.1, seconds=0.1) for _ in range(9)]
+            seq_b = [clone.observe(loss=0.1, seconds=0.1) for _ in range(9)]
+            assert seq_a == seq_b
+
+
+def test_roundtrip_rejects_ladder_mismatch():
+    ctrl = make_global_controller(GlobalBatchConfig(kind="geometric"), b0=24)
+    state = ctrl.state_dict()
+    state["rungs"] = [24, 999]
+    with pytest.raises(ValueError):
+        global_batch_from_state_dict(state)
+    state = ctrl.state_dict()
+    state["kind"] = "fuzzy"
+    with pytest.raises(ValueError):
+        global_batch_from_state_dict(state)
+
+
+# -------------------------------------------- inner controller: set_global_batch
+
+
+def test_set_global_batch_conserves_and_keeps_shares():
+    ctrl = make_controller([12, 24, 36], ControllerConfig())
+    # converge some EWMA state first
+    for _ in range(5):
+        ctrl.observe([b / x for b, x in zip(ctrl.batches, [1.0, 2.0, 3.0])])
+    before = [w.batch for w in ctrl.workers]
+    out = ctrl.set_global_batch(2 * sum(before))
+    assert sum(out) == 2 * sum(before)
+    assert ctrl.global_batch == 2 * sum(before)
+    # proportionality of shares preserved within rounding
+    for b_new, b_old in zip(out, before):
+        assert b_new == pytest.approx(2 * b_old, abs=1)
+    # per-worker timing EWMAs restart (batch changed -> stale signal),
+    # and the resize lands in the history like an inner adjustment
+    assert all(w.ewma_time is None for w in ctrl.workers)
+    assert ctrl.history[-1] == out
+    # no-op resize is a no-op
+    assert ctrl.set_global_batch(sum(out)) == out
+
+
+def test_set_global_batch_rejects_infeasible():
+    ctrl = make_controller([8, 8], ControllerConfig(b_min=4))
+    with pytest.raises(ValueError):
+        ctrl.set_global_batch(4)
+
+
+# ------------------------------------------------------------ LR coupling
+
+
+def test_batch_coupled_schedule_rules():
+    lin = batch_coupled(0.1, rule="linear")
+    assert lin.set_batch_ratio(4.0) == 4.0
+    assert float(lin(np.int32(0))) == pytest.approx(0.4)
+    sq = batch_coupled(0.1, rule="sqrt")
+    assert sq.set_batch_ratio(4.0) == 2.0
+    assert float(sq(np.int32(0))) == pytest.approx(0.2)
+    with pytest.raises(ValueError):
+        batch_coupled(0.1, rule="cubic")
+    with pytest.raises(ValueError):
+        lin.set_batch_ratio(0.0)
+    # wraps a schedule callable too
+    wrapped = BatchCoupledSchedule(lambda step: 0.5, rule="linear")
+    wrapped.set_batch_ratio(3.0)
+    assert float(wrapped(0)) == pytest.approx(1.5)
+
+
+def test_coupled_lr_reaches_jitted_update():
+    """Regression: jax.jit keys its trace cache on the wrapped callable, so
+    the per-scale update MUST be a fresh function object — re-jitting the
+    same bound method silently reuses the scale-1.0 trace."""
+    import jax.numpy as jnp
+
+    from repro.api import SimBackend
+
+    exp = Experiment(
+        workload=paper_workload("linreg"),
+        cluster=ClusterSpec.hlevel(24, 3.0, 3, workload="linreg", seed=0,
+                                   backend=SimBackend()),
+        optimizer=sgd(batch_coupled(0.02, rule="linear")),
+        config=TrainConfig(b0=4, microbatch=4, batching="dynamic",
+                           max_steps=4, seed=0,
+                           global_batch=GlobalBatchConfig(kind="gns")))
+    t = exp.session().trainer
+
+    def eff_lr(fn):
+        p = {"w": jnp.ones((2,))}
+        g = {"w": jnp.ones((2,))}
+        new_p, _ = fn(p, g, (), jnp.asarray(0))
+        return float(p["w"][0] - new_p["w"][0])
+
+    assert eff_lr(t._opt_update) == pytest.approx(0.02, rel=1e-4)
+    t._apply_global_batch(30)                        # ratio 30/12 = 2.5
+    assert t.optimizer.schedule.scale == pytest.approx(2.5)
+    assert eff_lr(t._opt_update) == pytest.approx(0.05, rel=1e-4)
+    t._apply_global_batch(24)                        # revisit a lower rung
+    assert eff_lr(t._opt_update) == pytest.approx(0.04, rel=1e-4)
+    # cache is keyed by scale: one jitted update per visited rung, no more
+    assert set(t._opt_jit_cache) == {1.0, 2.5, 2.0}
+
+
+# ------------------------------------------------- end-to-end on SimBackend
+
+
+def _sim_experiment(gb, max_steps=14, opt=None, sync="bsp"):
+    return Experiment(
+        workload=paper_workload("linreg", seed=100),
+        cluster=ClusterSpec.hlevel(24, 3.0, 3, workload="linreg", seed=0),
+        optimizer=opt or sgd(0.05),
+        config=TrainConfig(b0=8, microbatch=8, batching="dynamic", sync=sync,
+                           max_steps=max_steps, seed=0, global_batch=gb),
+    )
+
+
+def test_fixed_kind_is_bitwise_golden():
+    """kind='fixed' must reproduce the default TrainConfig trajectory
+    bit-for-bit (the trainer skips outer construction entirely)."""
+    base = _sim_experiment(GlobalBatchConfig()).run()
+    fixed = _sim_experiment(GlobalBatchConfig(kind="fixed")).run()
+    assert base["outer_resizes"] == fixed["outer_resizes"] == 0
+    assert len(base["history"]) == len(fixed["history"])
+    for ra, rb in zip(base["history"], fixed["history"]):
+        assert ra.loss == rb.loss
+        assert ra.sim_time == rb.sim_time
+        assert ra.batches == rb.batches
+        assert ra.adjusted == rb.adjusted
+
+
+def test_outer_resizes_land_on_rungs_end_to_end():
+    gb = GlobalBatchConfig(kind="geometric", geo_factor=2.0, geo_every=4,
+                           warmup=3, cooldown=2)
+    exp = _sim_experiment(gb, max_steps=20)
+    session = exp.session()
+    out = session.run()
+    outer = session.trainer.outer
+    assert out["outer_resizes"] >= 2
+    for rec in out["history"]:
+        assert sum(rec.batches) in outer.rungs, (
+            f"step {rec.step}: global batch {sum(rec.batches)} off-ladder")
+    for _, b in outer.resize_log:
+        assert b in outer.rungs
+
+
+def test_outer_resizes_on_asp_backend():
+    gb = GlobalBatchConfig(kind="geometric", geo_factor=2.0, geo_every=2,
+                           warmup=2, cooldown=1)
+    out = _sim_experiment(gb, max_steps=30, sync="asp").run()
+    assert out["outer_resizes"] >= 1
+
+
+def test_outer_state_survives_session_save_restore(tmp_path):
+    gb = GlobalBatchConfig(kind="geometric", geo_factor=2.0, geo_every=3,
+                           warmup=2, cooldown=1)
+    first = _sim_experiment(gb, max_steps=16,
+                            opt=sgd(batch_coupled(0.05))).session()
+    for i, _rec in enumerate(first):
+        if i + 1 >= 8:
+            break
+    assert first.trainer.outer.num_resizes >= 1
+    first.save(str(tmp_path / "ck"))
+    resumed = _sim_experiment(gb, max_steps=16,
+                              opt=sgd(batch_coupled(0.05))).session()
+    resumed.restore(str(tmp_path / "ck"))
+    assert (resumed.trainer.outer.state_dict()
+            == first.trainer.outer.state_dict())
+    assert (resumed.trainer.optimizer.schedule.scale
+            == first.trainer.optimizer.schedule.scale)
+    out = resumed.run()
+    assert out["steps"] == 16
+
+
+def test_restore_rejects_outer_config_mismatch(tmp_path):
+    gb = GlobalBatchConfig(kind="geometric", warmup=2, cooldown=1)
+    first = _sim_experiment(gb, max_steps=6).session()
+    first.run()
+    first.save(str(tmp_path / "ck"))
+    plain = _sim_experiment(GlobalBatchConfig(), max_steps=6).session()
+    with pytest.raises(ValueError, match="global-batch"):
+        plain.restore(str(tmp_path / "ck"))
+
+
+# ------------------------------------------------------- elastic membership
+
+
+def test_elastic_membership_preserves_outer_state():
+    wl = paper_workload("linreg", seed=100)
+    gb = GlobalBatchConfig(kind="gns", warmup=4, cooldown=2,
+                           gns_min_samples=2)
+    trainer = ElasticTrainer(
+        init_params=wl.init, loss_and_grad=wl.loss_and_grad,
+        next_batch=wl.next_batch, optimizer=sgd(0.05),
+        sim=ClusterSim(hlevel_cluster(24, 3.0, 3), WORKLOADS["linreg"],
+                       seed=0),
+        cfg=TrainConfig(b0=8, microbatch=8, batching="dynamic", max_steps=40,
+                        seed=0, global_batch=gb))
+    for _ in range(6):
+        trainer.bsp_step()
+    est_before = trainer.outer.estimator.state_dict()
+    assert est_before["samples"] > 0
+    total_before = sum(trainer.batches)
+    rungs_before = list(trainer.outer.rungs)
+
+    trainer.remove_worker(1)
+    # the outer loop is untouched by membership: same ladder, same EWMAs,
+    # and the inner law preserved the global batch across the removal
+    assert trainer.outer.estimator.state_dict() == est_before
+    assert trainer.outer.rungs == rungs_before
+    assert sum(trainer.batches) == total_before
+
+    for _ in range(4):
+        trainer.bsp_step()
+    # estimator keeps accumulating with the surviving K=2 split
+    assert trainer.outer.estimator.samples > est_before["samples"]
