@@ -1,0 +1,381 @@
+"""Spot-market churn benchmark (DESIGN.md §16).
+
+``--mode race`` (default) replays the SAME deterministic spot-market trace
+(>= 32 workers across 4 price zones with different core counts) through two
+arms on ``SimBackend``: dynamic variable batching (controller + cost-aware
+reallocation after every churn step) versus the paper's static
+``flops_proportional_allocation`` baseline (open-loop split, no
+reallocation).  Preemption storms, rejoins and degrading workers hit both
+arms identically; the dynamic arm re-apportions the invariant global batch
+around them.  With ``--steps`` >= 30 the bench ASSERTS the dynamic arm
+reaches the static arm's final loss in less simulated time.
+
+``--mode storm`` replays a mass preemption storm (>= 50% of workers
+cycled) on the 8-fake-device debug mesh: Σb_k conserved through every
+membership replan, per-worker recompiles within the DESIGN.md §11 ladder
+bound, and a mid-storm ``Session.save`` — taken with a preemption landing
+between the save and the next round — restores bit-identically.
+
+``--mode chaos`` runs the seeded fault plan (preempt-during-checkpoint,
+preempt-during-resize, straggler-during-GNS-cooldown) twice on the sim
+backend and ASSERTS the injection log and training history replay
+bit-identically.
+
+Prints ``name,value,derived`` CSV like the other drivers.
+
+    PYTHONPATH=src python benchmarks/churn_bench.py [--steps 40]
+    PYTHONPATH=src python benchmarks/churn_bench.py --mode storm
+    PYTHONPATH=src python benchmarks/churn_bench.py --mode chaos
+
+The CI smoke job runs ``--steps 3`` per mode (the race win assertion is
+informational below 30 steps; the storm/chaos assertions are structural
+and stay armed).  See ``benchmarks/README.md`` for the row guide.
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import sys
+import tempfile
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from backend_bench import _force_cpu_devices  # noqa: E402
+
+_ROWS: list = []
+
+STORM_SEED = 6  # 4 workers / 2 zones on the mesh: dense preempt/rejoin mix
+
+
+def _emit(name, value, derived) -> None:
+    _ROWS.append((name, float(value), derived))
+    print(f"{name},{float(value):.4g},{derived}")
+
+
+def _hetero_market(workers: int, *, zones: int, seed: int, horizon: int):
+    """>= 32 spot workers across ``zones`` price zones with DIFFERENT core
+    counts — so the static flops-proportional split (∝ cores) mismatches
+    real throughput (Amdahl is sublinear in cores) even before the storm
+    starts, and degrading workers widen the gap."""
+    from repro.het.spot import SpotMarket, SpotZone
+
+    per, extra = divmod(workers, zones)
+    zs = [
+        SpotZone(name=f"z{i}", workers=per + (1 if i < extra else 0),
+                 cores=4.0 + 4.0 * i, base_price=1.0 + 0.1 * i,
+                 bid=1.5 * (1.0 + 0.1 * i), volatility=0.15,
+                 spike_rate=0.04, spike_mag=1.3 + 0.1 * i,
+                 degrade_rate=0.01, straggle_rate=0.02)
+        for i in range(zones)
+    ]
+    return SpotMarket(zs, seed=seed, horizon=horizon)
+
+
+def _race_experiment(market, churn, *, batching: str, args):
+    from repro.api import (ClusterSpec, Experiment, SimBackend, TrainConfig,
+                           paper_workload)
+    from repro.optim import sgd
+
+    cluster = ClusterSpec.explicit(
+        market.initial_fleet(), workload="resnet", seed=args.seed,
+        backend=SimBackend()).with_churn(churn)
+    return Experiment(
+        workload=paper_workload("linreg"),
+        cluster=cluster,
+        optimizer=sgd(args.lr),
+        config=TrainConfig(b0=args.b0, microbatch=4, batching=batching,
+                           max_steps=args.steps, seed=args.seed),
+    )
+
+
+def _time_to_loss(history, target: float) -> float:
+    """First simulated second at which the loss dips to ``target``."""
+    for rec in history:
+        if rec.loss <= target:
+            return rec.sim_time
+    return math.inf
+
+
+def _assert_conserved(history, label: str) -> int:
+    total0 = sum(history[0].batches)
+    for rec in history:
+        assert sum(rec.batches) == total0, (
+            f"{label}: step {rec.step} leaked global batch "
+            f"({sum(rec.batches)} != {total0})")
+    return total0
+
+
+def run_race(args) -> None:
+    from repro.api import compile_churn
+    from repro.core import flops_proportional_allocation
+
+    market = _hetero_market(args.workers, zones=4, seed=args.seed,
+                            horizon=args.steps)
+    trace = market.simulate()
+    if args.csv:
+        trace.to_csv(args.csv)
+    ts = trace.summary()
+    _emit("churn/trace/events", len(trace.events),
+          f"preempts={ts['preempts']} rejoins={ts['rejoins']} "
+          f"degrades={ts['degrades']} straggles={ts['straggles']} "
+          f"cycled_fraction={ts['cycled_fraction']:.3g}")
+    min_workers = max(2, args.workers // 4)
+
+    # dynamic arm: controller + cost-aware reallocation after churn steps
+    dyn_churn = compile_churn(trace, min_workers=min_workers,
+                              reallocate=True)
+    dyn = _race_experiment(market, dyn_churn, batching="dynamic",
+                           args=args).session().run()
+
+    # static arm: flops-proportional open-loop split, same storm, no
+    # reallocation events, no controller
+    stat_churn = compile_churn(trace, min_workers=min_workers,
+                               reallocate=False)
+    stat_session = _race_experiment(market, stat_churn, batching="static",
+                                    args=args).session()
+    peaks = [w.cores * w.flops_ratio for w in stat_session.trainer.sim.workers]
+    stat_session.trainer.batches = flops_proportional_allocation(
+        peaks, args.b0)
+    stat = stat_session.run()
+
+    total_dyn = _assert_conserved(dyn["history"], "dynamic")
+    total_stat = _assert_conserved(stat["history"], "static")
+    assert total_dyn == total_stat == args.b0 * len(market.initial_fleet())
+    _emit("churn/race/workers", len(market.initial_fleet()),
+          f"B_global={total_dyn} conserved through "
+          f"{dyn_churn.summary().get('RemoveWorker', 0)} preempts + "
+          f"{dyn_churn.summary().get('AddWorker', 0)} rejoins on BOTH arms")
+    _emit("churn/race/static_final_loss", stat["final_loss"],
+          f"sim_time={stat['sim_time']:.4g}s flops_proportional split, "
+          f"no reallocation")
+    _emit("churn/race/dynamic_final_loss", dyn["final_loss"],
+          f"sim_time={dyn['sim_time']:.4g}s "
+          f"{dyn['batch_adjustments']} controller updates")
+
+    target = stat["final_loss"] * (1.0 + args.target_slack)
+    t_stat = _time_to_loss(stat["history"], target)
+    t_dyn = _time_to_loss(dyn["history"], target)
+    speedup = t_stat / t_dyn if math.isfinite(t_dyn) and t_dyn > 0 else 0.0
+    _emit("churn/race/time_to_target_static", t_stat,
+          f"simulated seconds to loss<={target:.4g}")
+    _emit("churn/race/time_to_target_dynamic",
+          t_dyn if math.isfinite(t_dyn) else -1.0,
+          "simulated seconds to the static arm's final loss (-1 = never)")
+    _emit("churn/race/sim_speedup", speedup,
+          "static/dynamic time-to-target on the same replayed trace "
+          "(>1 = dynamic wins)")
+
+    if args.steps < 30:
+        _emit("churn/race/asserts", 0,
+              "skipped (--steps < 30: no steady state)")
+        return
+    assert math.isfinite(t_dyn) and t_dyn < t_stat, (
+        f"dynamic batching should beat the static flops-proportional split "
+        f"to loss<={target:.4g} on the replayed spot trace: "
+        f"dynamic={t_dyn:.4g}s static={t_stat:.4g}s")
+    _emit("churn/race/asserts", 1,
+          f"dynamic beat static to loss<={target:.4g} by {speedup:.3g}x "
+          f"under the same preemption storm")
+
+
+def run_storm(args, mesh) -> None:
+    from repro.api import (ClusterSpec, Experiment, MeshBackend, TrainConfig,
+                           compile_churn, paper_workload)
+    from repro.het.simulator import WorkerSpec
+    from repro.het.spot import storm_market
+    from repro.optim import sgd
+
+    market = storm_market(4, zones=2, seed=STORM_SEED, horizon=12,
+                          volatility=0.35, spike_rate=0.3,
+                          degrade_rate=0.05, straggle_rate=0.08)
+    trace = market.simulate()
+    if args.csv:
+        trace.to_csv(args.csv)
+    churn = compile_churn(trace, min_workers=2)
+    cycled = trace.summary()["cycled_fraction"]
+    assert cycled >= 0.5, (
+        f"storm mode needs a MASS storm (>=50% of workers cycled); "
+        f"this trace only cycled {cycled:.0%}")
+    _emit("churn/storm/cycled_fraction", cycled,
+          f"{trace.summary()['preempts']} preempts + "
+          f"{trace.summary()['rejoins']} rejoins over "
+          f"{len(market.initial_fleet())} initial workers")
+
+    def experiment(fleet, schedule):
+        cluster = ClusterSpec.explicit(
+            fleet, workload="mnist-cnn",
+            backend=MeshBackend(mesh=mesh, dilation="from-spec",
+                                growth=args.growth))
+        if schedule:
+            cluster = cluster.with_schedule(*schedule)
+        return Experiment(
+            workload=paper_workload("linreg"),
+            cluster=cluster,
+            optimizer=sgd(args.lr),
+            config=TrainConfig(b0=args.b0, microbatch=4, batching="dynamic",
+                               max_steps=args.steps, seed=args.seed),
+        )
+
+    def snapshot(session):
+        t = session.trainer
+        return {
+            "step": t.step_idx,
+            "batches": list(t.batches),
+            "controller": t.controller.state_dict(),
+            "exec": t.exec_state_dict(),
+            "engine": (t.engine.version, list(t.engine.read_version)),
+        }
+
+    event_steps = sorted({ev.step for ev in churn.events})
+    fireable = [s for s in event_steps if s < args.steps]
+    save_step = max(fireable) if fireable else None
+
+    s1 = experiment(market.initial_fleet(), churn.events).session()
+    if save_step is not None:
+        for _ in s1:
+            if s1.step_idx >= save_step:
+                break
+        path = os.path.join(tempfile.mkdtemp(), "mid-storm")
+        s1.save(path)
+        snap1 = snapshot(s1)
+        suffix = [ev for ev in churn.events if ev.step >= save_step]
+        s2 = experiment([WorkerSpec(cores=8.0) for _ in range(s1.trainer.k)],
+                        suffix).session()
+        s2.restore(path)
+        assert snapshot(s2) == snap1, \
+            "mid-storm restore is not bit-identical"
+        _emit("churn/storm/ckpt_bit_identical", 1,
+              f"controller+exec+engine state equal after restore at "
+              f"mid-storm step {save_step} (an event lands AT that step)")
+        out2 = s2.run()
+        _assert_conserved(out2["history"], "storm-resumed")
+    else:
+        _emit("churn/storm/ckpt_bit_identical", 0,
+              f"skipped: no churn event before step {args.steps}")
+    out1 = s1.run()
+    total0 = _assert_conserved(out1["history"], "storm")
+    t = s1.trainer
+    _emit("churn/storm/global_batch", total0,
+          f"conserved through {len([e for e in t.membership_log])} "
+          f"membership-log entries on the mesh")
+    per_worker = [sorted(b) for b in t.worker_buckets if b]
+    worst = max(len(b) for b in per_worker)
+    bound = max(
+        math.ceil(math.log(b[-1] / b[0], args.growth)) + 1 if len(b) > 1
+        else 1 for b in per_worker)
+    assert worst <= bound, (
+        f"per-worker bucket count {worst} exceeds the §11 ladder bound "
+        f"{bound} under the storm: {per_worker}")
+    _emit("churn/storm/recompiles_within_bound", 1,
+          f"max {worst} buckets <= ladder bound {bound} through the storm")
+    _emit("churn/storm/controller_events", t.controller.membership_events,
+          f"membership/reallocate events absorbed; num_updates="
+          f"{t.controller.num_updates} (checkpoint surface untouched)")
+
+
+def run_chaos_mode(args) -> None:
+    from repro.api import (ClusterSpec, Experiment, SimBackend, TrainConfig,
+                           paper_workload)
+    from repro.core import GlobalBatchConfig
+    from repro.het.chaos import make_fault_plan, run_chaos
+    from repro.optim import batch_coupled, sgd
+
+    def make_session():
+        exp = Experiment(
+            workload=paper_workload("linreg"),
+            cluster=ClusterSpec.hlevel(24, 3.0, 3, workload="linreg",
+                                       seed=args.seed,
+                                       backend=SimBackend()),
+            optimizer=sgd(batch_coupled(args.lr, rule="linear")),
+            config=TrainConfig(b0=4, microbatch=4, batching="dynamic",
+                               max_steps=args.steps, seed=args.seed,
+                               global_batch=GlobalBatchConfig(
+                                   kind="gns", warmup=4, cooldown=4,
+                                   gns_min_samples=4)),
+        )
+        return exp.session()
+
+    # fault plans need >= 4 steps of room; the CI --steps 3 smoke still
+    # runs (faults that never arm are reported via chaos_pending)
+    plan = make_fault_plan(args.seed + 11, horizon=max(args.steps, 4))
+    path = os.path.join(tempfile.mkdtemp(), "chaos-ckpt")
+    r1, _h1 = run_chaos(make_session, plan, checkpoint_path=path)
+    r2, _h2 = run_chaos(make_session, plan, checkpoint_path=path)
+    assert r1["chaos_log"] == r2["chaos_log"], \
+        "chaos injections did not replay identically"
+    hist1 = [(r.step, r.loss, tuple(r.batches)) for r in r1["history"]]
+    hist2 = [(r.step, r.loss, tuple(r.batches)) for r in r2["history"]]
+    assert hist1 == hist2, "chaos-run training history is not deterministic"
+    _emit("churn/chaos/deterministic", 1,
+          f"two runs of fault plan seed={plan.seed} replayed "
+          f"bit-identically ({len(hist1)} steps)")
+    _emit("churn/chaos/faults_fired", len(r1["chaos_log"]),
+          f"log={[(s, k) for s, k, _ in r1['chaos_log']]}")
+    _emit("churn/chaos/faults_pending", r1["chaos_pending"],
+          "armed faults whose trigger window never opened in this run "
+          "(reported, never silently dropped)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--mode", default="race",
+                    choices=["race", "storm", "chaos"],
+                    help="race = dynamic vs static flops-proportional on a "
+                         "replayed >=32-worker spot trace (sim); storm = "
+                         "mass preemption storm + mid-storm checkpoint on "
+                         "the debug mesh; chaos = seeded fault-plan "
+                         "determinism (sim)")
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--devices", type=int, default=8,
+                    help="fake CPU devices for the debug mesh (storm mode)")
+    ap.add_argument("--workers", type=int, default=32,
+                    help="spot fleet size for race mode (>= 32 for the "
+                         "acceptance assertion)")
+    ap.add_argument("--b0", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--growth", type=float, default=1.25)
+    ap.add_argument("--target-slack", type=float, default=0.02,
+                    help="relative slack on the static arm's final loss "
+                         "when defining the shared time-to-target")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--csv", default=None,
+                    help="also write the replayed churn trace "
+                         "(step,kind,zone,slot,price,capacity,detail) to "
+                         "this file (CI archives it)")
+    ap.add_argument("--emit-json", default=None,
+                    help="merge this run's rows into the per-PR "
+                         "perf-trajectory artifact, e.g. BENCH_8.json "
+                         "(benchmarks/artifact.py)")
+    args = ap.parse_args()
+
+    _force_cpu_devices(args.devices)
+
+    print("name,value,derived")
+    if args.mode == "race":
+        run_race(args)
+    elif args.mode == "storm":
+        from repro.launch.mesh import make_debug_mesh
+
+        run_storm(args, make_debug_mesh(args.devices))
+    else:
+        run_chaos_mode(args)
+    if args.emit_json:
+        import jax
+
+        from benchmarks.artifact import rows_to_payload, update_bench_json
+
+        update_bench_json(
+            args.emit_json, f"churn_bench/{args.mode}", {
+                "steps": args.steps,
+                "rows": rows_to_payload(_ROWS),
+            },
+            meta={"jax": jax.__version__, "devices": args.devices})
+
+
+if __name__ == "__main__":
+    main()

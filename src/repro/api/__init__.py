@@ -26,9 +26,13 @@ from repro.api.backend import Backend, MeshBackend, SimBackend
 from repro.api.cluster import (
     At,
     AddWorker,
+    ChurnSchedule,
     ClusterSpec,
+    Reallocate,
     RemoveWorker,
     ServeSpec,
+    SlowWorker,
+    compile_churn,
 )
 from repro.api.experiment import Experiment
 from repro.api.session import (
@@ -56,6 +60,7 @@ __all__ = [
     "At",
     "Backend",
     "CheckpointHook",
+    "ChurnSchedule",
     "ClusterSpec",
     "CounterBatchSource",
     "EarlyStopHook",
@@ -64,12 +69,15 @@ __all__ = [
     "LoggingHook",
     "MeshBackend",
     "MetricCollector",
+    "Reallocate",
     "RemoveWorker",
     "ServeSpec",
     "Session",
     "SimBackend",
+    "SlowWorker",
     "TrainConfig",
     "Workload",
+    "compile_churn",
     "lm_workload",
     "mean_loss_adapter",
     "mean_loss_workload",

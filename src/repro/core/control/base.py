@@ -300,6 +300,43 @@ class BatchController:
         self._on_update()
         return self.batches
 
+    def apply_allocation(self, plan: Sequence[float]) -> list[int]:
+        """Adopt an externally computed batch plan WITHOUT losing state.
+
+        The churn-reallocation path (DESIGN.md §16): after a preemption
+        storm, :class:`repro.api.cluster.Reallocate` computes a
+        price/capacity-aware split (`core.allocation.cost_aware_allocation`)
+        and installs it here.  Per-worker adaptive ``b_max`` bounds and
+        last-throughput history survive; the plan is re-apportioned through
+        the controller's own [b_min, b_max] bounds so an external allocator
+        can never install a plan the control law itself would refuse.  Like
+        any committed readjustment, EWMA windows restart (old iteration
+        times describe the old batch sizes) — but ``num_updates`` is NOT
+        bumped: this is a membership-class action, not a control decision.
+        """
+        if len(plan) != len(self.workers):
+            raise ValueError(
+                f"plan has {len(plan)} entries for {len(self.workers)} "
+                f"workers")
+        cfg = self.config
+        if not cfg.conserve_global:
+            self.global_batch = int(round(sum(plan)))
+        new_batches = largest_remainder_round(
+            [float(b) for b in plan],
+            self.global_batch if cfg.conserve_global else None,
+            lo=cfg.b_min,
+            hi=[self._hi_bound(w) for w in self.workers])
+        if all(nb == w.batch for nb, w in zip(new_batches, self.workers)):
+            return self.batches
+        for w, nb in zip(self.workers, new_batches):
+            w.batch = int(nb)
+            w.ewma_time = None
+        self._iters_since_update = 0
+        self.membership_events += 1
+        self.history.append(self.batches)
+        self._on_update()
+        return self.batches
+
     # ---------------------------------------------------------- membership
 
     def remove_worker(self, k: int) -> list[int]:

@@ -169,6 +169,144 @@ def plan_slices(extent: int, k: int,
     return SlicePlan(extent=extent, quantum=quantum, slices=tuple(slices))
 
 
+# ------------------------------------------------------ multi-tenant pool
+
+
+class DevicePool:
+    """Shared device pool: multiple tenants lease runs of one data axis.
+
+    The multi-tenant generalization of the single-plan model above
+    (DESIGN.md §16): where a :class:`SlicePlan` tiles the axis for ONE
+    training fleet, a pool arbitrates the axis between *tenants* — a
+    training ``Session``, a co-located serve slice, a second experiment —
+    each of which then plans its own slices inside its lease.
+
+    Invariants (checked by :meth:`check`, property-tested in
+    tests/test_placement.py):
+
+      * leases are **disjoint** contiguous runs, **quantum-aligned**, and
+        **packed** end-to-end from device 0 in lease order — free capacity
+        is always one contiguous run at the top of the axis;
+      * every lease keeps at least one quantum, and the sum of leases
+        never exceeds ``extent``.
+
+    Resizing or releasing a middle lease shifts later tenants down to keep
+    the packing invariant; each tenant whose *start* moves counts as one
+    migration (``migrations`` — callers use it to price reconfiguration,
+    the pool-level analogue of the §11 recompile bound).
+    """
+
+    def __init__(self, extent: int, *, quantum: int = 1):
+        if extent < 1:
+            raise ValueError(f"extent must be >= 1, got {extent}")
+        if quantum < 1:
+            raise ValueError(f"quantum must be >= 1, got {quantum}")
+        if extent % quantum:
+            raise ValueError(
+                f"extent {extent} is not a multiple of quantum {quantum}")
+        self.extent = int(extent)
+        self.quantum = int(quantum)
+        self._leases: dict[str, int] = {}   # tenant -> devices, lease order
+        self.migrations = 0
+
+    # ------------------------------------------------------------- queries
+
+    @property
+    def tenants(self) -> list[str]:
+        return list(self._leases)
+
+    @property
+    def leased(self) -> int:
+        return sum(self._leases.values())
+
+    @property
+    def free(self) -> int:
+        return self.extent - self.leased
+
+    def _starts(self) -> dict[str, int]:
+        starts, cursor = {}, 0
+        for tenant, n in self._leases.items():
+            starts[tenant] = cursor
+            cursor += n
+        return starts
+
+    def region(self, tenant: str) -> tuple[int, int]:
+        """(start, length) of the tenant's current lease."""
+        if tenant not in self._leases:
+            raise KeyError(f"no lease for tenant {tenant!r}; "
+                           f"active: {self.tenants}")
+        return self._starts()[tenant], self._leases[tenant]
+
+    def plan(self, tenant: str, k: int,
+             weights: Optional[Sequence[float]] = None) -> SlicePlan:
+        """A :class:`SlicePlan` over the tenant's lease (lease-local device
+        coordinates — add the region start for axis-global indices)."""
+        _, length = self.region(tenant)
+        return plan_slices(length, k, weights, quantum=self.quantum)
+
+    # -------------------------------------------------------------- leases
+
+    def _validated(self, tenant: str, devices: int) -> int:
+        if devices < self.quantum or devices % self.quantum:
+            raise ValueError(
+                f"tenant {tenant!r} lease of {devices} devices must be a "
+                f"positive multiple of quantum {self.quantum}")
+        return int(devices)
+
+    def lease(self, tenant: str, devices: int) -> tuple[int, int]:
+        """Grant ``devices`` to a new tenant; returns its (start, length)."""
+        if tenant in self._leases:
+            raise ValueError(
+                f"tenant {tenant!r} already holds a lease — use resize()")
+        devices = self._validated(tenant, devices)
+        if devices > self.free:
+            raise ValueError(
+                f"tenant {tenant!r} wants {devices} devices, pool has "
+                f"{self.free} free of {self.extent}")
+        self._leases[tenant] = devices
+        return self.region(tenant)
+
+    def _repack(self, before: dict[str, int]) -> None:
+        after = self._starts()
+        self.migrations += sum(
+            1 for t, s in after.items() if before.get(t, s) != s)
+
+    def release(self, tenant: str) -> None:
+        """Return the tenant's devices; later tenants shift down (packed)."""
+        self.region(tenant)  # raises on unknown tenant
+        before = self._starts()
+        del self._leases[tenant]
+        self._repack(before)
+
+    def resize(self, tenant: str, devices: int) -> tuple[int, int]:
+        """Grow or shrink a lease in place; later tenants shift to repack."""
+        self.region(tenant)
+        devices = self._validated(tenant, devices)
+        if devices > self.free + self._leases[tenant]:
+            raise ValueError(
+                f"tenant {tenant!r} wants {devices} devices, pool has "
+                f"{self.free + self._leases[tenant]} available")
+        before = self._starts()
+        self._leases[tenant] = devices
+        self._repack(before)
+        return self.region(tenant)
+
+    # ----------------------------------------------------------- invariants
+
+    def check(self) -> None:
+        """Raise if any pool invariant is violated (defense in depth — the
+        mutators above cannot produce a violating state)."""
+        cursor = 0
+        for tenant, n in self._leases.items():
+            if n < self.quantum or n % self.quantum:
+                raise ValueError(
+                    f"lease {tenant!r}={n} violates quantum {self.quantum}")
+            cursor += n
+        if cursor > self.extent:
+            raise ValueError(
+                f"leases cover {cursor} devices, pool has {self.extent}")
+
+
 # ------------------------------------------------------- co-located serving
 
 

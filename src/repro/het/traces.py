@@ -3,6 +3,14 @@
 A trace maps sim-time (seconds) -> availability multiplier in (0, 1].
 Composable with `compose`; all traces are deterministic functions of time so
 BSP/ASP replays are reproducible.
+
+Boundary convention (property-tested in tests/test_traces.py): every
+windowed trace is active on the half-open interval [start, end) — the
+instant an event begins it is already in effect, the instant it ends it is
+fully over.  `ramp` reaches its floor exactly at ``start + duration``.
+`compose` clamps the product into [1e-6, 1.0], so stacked preemptions
+(level=1e-3 squared is already at the floor) can never drive availability
+to zero or a misbehaving component push it above full.
 """
 
 from __future__ import annotations
@@ -57,7 +65,10 @@ def random_spikes(seed: int, horizon: float, rate_per_100s: float = 2.0,
     starts = np.sort(rng.uniform(0.0, horizon, size=n))
 
     def trace(t):
-        i = np.searchsorted(starts, t) - 1
+        # side='right' so a spike is active on [start, start+spike_len):
+        # at t == start the spike has begun (searchsorted 'left' would put
+        # the boundary instant BEFORE its own spike)
+        i = int(np.searchsorted(starts, t, side="right")) - 1
         if i >= 0 and t - starts[i] < spike_len:
             return level
         return 1.0
@@ -77,10 +88,18 @@ def preemption(at: float, restore: float | None = None, level: float = 1e-3):
 
 
 def compose(*traces):
+    """Product of traces, clamped into [1e-6, 1.0].
+
+    The lower clamp keeps stacked near-total outages (e.g. two overlapping
+    ``preemption(level=1e-3)`` windows) from collapsing availability to a
+    divide-by-zero zero; the upper clamp keeps the composition inside the
+    (0, 1] availability contract even if a component exceeds 1.
+    """
+
     def trace(t):
         out = 1.0
         for tr in traces:
             out *= tr(t)
-        return max(out, 1e-6)
+        return min(max(out, 1e-6), 1.0)
 
     return trace

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 from typing import Callable
 
-from repro.core import largest_remainder_round
+from repro.core import cost_aware_allocation, largest_remainder_round
 from repro.het.simulator import ClusterSim, WorkerSpec
 from repro.train.loop import HeterogeneousTrainer, TrainConfig
 
@@ -97,6 +97,35 @@ class ElasticTrainer(HeterogeneousTrainer):
         # the newcomer reads the CURRENT params (no staleness debt) and, if
         # an ASP schedule is live, dispatches immediately
         self.engine.add_worker(self.batches[-1], payload=self.params)
+
+    def reallocate_cost_aware(self) -> list[int]:
+        """Churn replan (DESIGN.md §16): re-split the invariant global batch
+        through the price/capacity-aware allocator.
+
+        Applied by :class:`repro.api.cluster.Reallocate` after every
+        churn-schedule step that changed the cluster: RNG-free peek
+        throughputs weigh each worker, memory-cliff capacities cap it, and
+        spot prices bias the split toward cheap capacity — with controller
+        state (EWMA windows, adaptive ``b_max``) carried over via
+        :meth:`~repro.core.control.base.BatchController.apply_allocation`.
+        """
+        total = (self.controller.global_batch if self.controller is not None
+                 else sum(self.batches))
+        probe = max(total // self.k, 1)
+        xput = [self.sim.peek_throughput(i, probe) for i in range(self.k)]
+        b_min = (self.controller.config.b_min
+                 if self.controller is not None else 1)
+        caps = [max(w.b_mem, b_min) if w.b_mem is not None else None
+                for w in self.sim.workers]
+        plan = cost_aware_allocation(
+            xput, total, capacities=caps,
+            prices=[w.price for w in self.sim.workers], b_min=b_min)
+        self.membership_log.append((self.step_idx, "reallocate", -1))
+        if self.controller is not None:
+            self.batches = self.controller.apply_allocation(plan)
+        else:
+            self.batches = plan
+        return self.batches
 
     # ------------------------------------------------------------- runs
 

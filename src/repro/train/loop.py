@@ -300,6 +300,27 @@ class HeterogeneousTrainer(OuterBatchMixin):
         xput = [self.sim.peek_throughput(i, cfg.b0) for i in range(self.k)]
         return static_allocation(xput, cfg.b0)
 
+    # --------------------------------------------------------- degradation
+
+    def slow_worker(self, k: int, factor: float) -> None:
+        """Multiplicative slowdown of worker ``k`` (``factor`` > 1 = slower).
+
+        The sim-backend half of the :class:`repro.api.cluster.SlowWorker`
+        event (DESIGN.md §16): scales the worker's modelled per-sample
+        speed, so slow-degrading spot instances and transient stragglers
+        hit the controller exactly like real interference would.  Factors
+        compose; applying the reciprocal restores the worker bit-exactly.
+        The spec is replaced, never mutated — a ``ClusterSpec`` that shares
+        the spec object can still rebuild a pristine simulator.
+        """
+        if not (0 <= k < self.k):
+            raise ValueError(f"no worker {k} in a {self.k}-cluster")
+        if not (factor > 0):
+            raise ValueError(f"slowdown factor must be positive, got {factor}")
+        spec = self.sim.workers[k]
+        self.sim.workers[k] = dataclasses.replace(
+            spec, flops_ratio=spec.flops_ratio / factor)
+
     # ------------------------------------------------------------ gradients
 
     def _build_accum(self, loss_and_grad: Callable) -> Callable:

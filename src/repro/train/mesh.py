@@ -846,6 +846,49 @@ class MeshTrainer(OuterBatchMixin):
         # live, dispatches immediately (predicted via the rate-model mean)
         self.engine.add_worker(self.batches[-1], payload=self.params)
 
+    def slow_worker(self, k: int, factor: float) -> None:
+        """Mesh half of :class:`repro.api.cluster.SlowWorker` (DESIGN.md
+        §16): scales worker ``k``'s emulation dilation, the same knob
+        ``MeshBackend(dilation=...)`` uses for declared heterogeneity — the
+        measured control signal slows down exactly like a degrading spot
+        instance would.  Factors compose; the reciprocal restores.  The
+        dilation vector is part of ``exec_state_dict``, so a mid-degrade
+        checkpoint resumes with the slowdown intact."""
+        if not (0 <= k < self.k):
+            raise ValueError(f"no worker {k} in a {self.k}-cluster")
+        if not (factor > 0):
+            raise ValueError(f"slowdown factor must be positive, got {factor}")
+        self.dilation[k] = self.dilation[k] * float(factor)
+
+    def reallocate_cost_aware(self) -> list[int]:
+        """Churn replan (DESIGN.md §16) from MEASURED throughput.
+
+        The mesh analogue of ``ElasticTrainer.reallocate_cost_aware``: real
+        hardware exposes no simulator capacities or spot prices, so the
+        cost-aware allocator reduces to the measured-throughput split —
+        workers without a measurement yet (fresh joiners mid-storm) weigh
+        in at the fleet mean.  Controller state is preserved via
+        ``apply_allocation``; slices are NOT replanned (batch shares move,
+        devices stay — resizes walk the existing bucket ladders, §11).
+        """
+        total = (self.controller.global_batch if self.controller is not None
+                 else sum(self.batches))
+        xput = [self.batches[i] / self._ewma[i]
+                if i < len(self.batches) and self._ewma[i] else None
+                for i in range(self.k)]
+        known = [x for x in xput if x is not None] or [1.0]
+        mean = sum(known) / len(known)
+        xput = [mean if x is None else x for x in xput]
+        b_min = (self.controller.config.b_min
+                 if self.controller is not None else 1)
+        plan = cost_aware_allocation(xput, total, b_min=b_min)
+        self.membership_log.append((self.step_idx, "reallocate", -1))
+        if self.controller is not None:
+            self.batches = self.controller.apply_allocation(plan)
+        else:
+            self.batches = plan
+        return self.batches
+
     def set_reserve(self, n: int) -> None:
         """Resize the reserved serve region at the top of the data axis.
 

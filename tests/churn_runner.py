@@ -1,0 +1,176 @@
+"""Subprocess helper: spot-market churn on the 8-fake-device debug mesh
+(DESIGN.md §16).  Executed by test_churn.py in a fresh interpreter so the
+XLA device-count flag can be set before jax initializes.
+
+Covers, on a real multi-device mesh: a compiled preemption storm replayed
+through disjoint-slice membership replans (Σb_k conserved end-to-end),
+the §11 recompile bound under churn (batches walk the per-worker bucket
+ladders), straggler emulation via the dilation staircase, mid-storm
+checkpoint/restore bit-equivalence of controller + measurement state, and
+the multi-tenant :class:`DevicePool` carving the same device axis.
+"""
+
+import math
+import os
+import sys
+import tempfile
+
+os.environ["JAX_PLATFORMS"] = "cpu"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.api import (  # noqa: E402
+    ClusterSpec,
+    Experiment,
+    MeshBackend,
+    TrainConfig,
+    compile_churn,
+    paper_workload,
+)
+from repro.core import DevicePool  # noqa: E402
+from repro.het.simulator import WorkerSpec  # noqa: E402
+from repro.het.spot import storm_market  # noqa: E402
+from repro.launch.mesh import make_debug_mesh  # noqa: E402
+from repro.optim import sgd  # noqa: E402
+
+STORM_SEED = 6  # 4 workers / 2 zones: 5 preempts, 5 rejoins, cycled 1.75
+
+
+def make_storm():
+    market = storm_market(4, zones=2, seed=STORM_SEED, horizon=12,
+                          volatility=0.35, spike_rate=0.3,
+                          degrade_rate=0.05, straggle_rate=0.08)
+    churn = compile_churn(market.simulate(), min_workers=2)
+    return market, churn
+
+
+def experiment(mesh, fleet, schedule=(), **cfg_kw):
+    cfg = dict(b0=16, microbatch=4, batching="dynamic", max_steps=14, seed=0)
+    cfg.update(cfg_kw)
+    cluster = ClusterSpec.explicit(
+        fleet, workload="mnist-cnn",
+        backend=MeshBackend(mesh=mesh, dilation="from-spec"))
+    if schedule:
+        cluster = cluster.with_schedule(*schedule)
+    return Experiment(
+        workload=paper_workload("linreg"),
+        cluster=cluster,
+        optimizer=sgd(0.05),
+        config=TrainConfig(**cfg),
+    )
+
+
+def controller_state(session):
+    t = session.trainer
+    return {
+        "step": t.step_idx,
+        "batches": list(t.batches),
+        "controller": t.controller.state_dict(),
+        "exec": t.exec_state_dict(),
+        "engine": (t.engine.version, list(t.engine.read_version)),
+    }
+
+
+def check_ladder_bound(trainer) -> None:
+    """§11: churn replans walk per-worker bucket ladders; compiles per
+    worker stay within ceil(log_growth(b_hi/b_lo)) + 1."""
+    per_worker = [sorted(b) for b in trainer.worker_buckets if b]
+    worst = max(len(b) for b in per_worker)
+    bound = max(
+        math.ceil(math.log(b[-1] / b[0], trainer.growth)) + 1 if len(b) > 1
+        else 1 for b in per_worker)
+    assert worst <= bound, (
+        f"per-worker bucket count {worst} exceeds the §11 ladder bound "
+        f"{bound} under churn: {per_worker}")
+
+
+def main() -> int:
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = make_debug_mesh(8)
+    market, churn = make_storm()
+    summary = churn.summary()
+    assert summary.get("RemoveWorker", 0) >= 2, summary
+    assert summary.get("AddWorker", 0) >= 1, summary
+    assert summary.get("SlowWorker", 0) >= 1, summary
+
+    # ---- storm replay: membership replans conserve Σb_k on the mesh ----
+    session = experiment(mesh, market.initial_fleet(),
+                         schedule=churn.events).session()
+    out = session.run()
+    assert out["steps"] == 14
+    total0 = sum(out["history"][0].batches)
+    for rec in out["history"]:
+        assert sum(rec.batches) == total0, \
+            f"step {rec.step}: storm leaked global batch"
+    kinds = {e[1] for e in session.trainer.membership_log}
+    assert {"remove", "add", "reallocate"} <= kinds, kinds
+    trainer = session.trainer
+    plan = trainer.slice_plan
+    covered = sorted(i for w in range(plan.k) for i in plan.devices_of(w))
+    assert covered == list(range(plan.extent)), \
+        "post-storm slices must stay disjoint and exhaustive"
+    assert len(trainer.dilation) == trainer.k
+    assert all(d > 0 for d in trainer.dilation)
+    check_ladder_bound(trainer)
+
+    # ---- mid-storm checkpoint: save with a preemption landing between
+    # the save and the next round; restore is bit-identical ----
+    event_steps = sorted({ev.step for ev in churn.events})
+    save_step = next(s for s in event_steps if s >= 4)
+    s1 = experiment(mesh, market.initial_fleet(),
+                    schedule=churn.events).session()
+    for _ in s1:
+        if s1.step_idx >= save_step:
+            break
+    assert s1.step_idx == save_step
+    path = os.path.join(tempfile.mkdtemp(), "mid-storm")
+    s1.save(path)
+    snap1 = controller_state(s1)
+
+    k_now = s1.trainer.k
+    suffix = [ev for ev in churn.events if ev.step >= save_step]
+    assert any(ev.step == save_step for ev in suffix)
+    s2 = experiment(mesh, [WorkerSpec(cores=8.0) for _ in range(k_now)],
+                    schedule=suffix).session()
+    s2.restore(path)
+    snap2 = controller_state(s2)
+    assert snap1 == snap2, \
+        f"mid-storm restore not bit-identical:\n{snap1}\n{snap2}"
+    for la, lb in zip(jax.tree_util.tree_leaves(s1.params),
+                      jax.tree_util.tree_leaves(s2.params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    # both replay the remaining storm to completion (measured step times
+    # differ run-to-run on a real mesh, so the contract past the restore
+    # point is conservation + matching membership, not equal wall times)
+    out1, out2 = s1.run(), s2.run()
+    assert s1.step_idx == s2.step_idx == 14
+    assert sum(out1["final_batches"]) == sum(out2["final_batches"]) == total0
+    tail1 = [e for e in s1.trainer.membership_log if e[0] >= save_step]
+    assert tail1 == s2.trainer.membership_log, \
+        "resumed run replayed a different storm"
+    check_ladder_bound(s2.trainer)
+
+    # ---- multi-tenant pool on the same 8-device axis ----
+    pool = DevicePool(len(jax.devices()), quantum=1)
+    pool.lease("train", 6)
+    pool.lease("serve", 2)
+    tplan = pool.plan("train", 3)
+    assert tplan.extent == 6 and sum(tplan.lengths) == 6
+    assert pool.region("serve") == (6, 2)
+    pool.resize("train", 4)          # shrink under churn; serve migrates
+    assert pool.region("serve") == (4, 2)
+    assert pool.migrations == 1
+    pool.lease("exp2", 2)            # freed capacity goes to a new tenant
+    assert pool.leased == 8
+    pool.check()
+
+    print("churn_runner: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,292 @@
+"""End-to-end churn invariants under spot-market storms (DESIGN.md §16).
+
+Satellite contracts for the spot-churn subsystem, on the sim backend
+in-process and on the 8-fake-device debug mesh via the
+``churn_runner.py`` subprocess:
+
+  * membership storms (preempt / rejoin / straggle, compiled from a
+    replayed market trace) conserve the global batch exactly — with a GNS
+    outer loop Σb_k tracks the outer's current B_global instead;
+  * survivor controller state (adaptive ``b_max``, throughput history)
+    rides through preemptions and cost-aware reallocations; reallocation
+    bumps ``membership_events``, never ``num_updates``;
+  * checkpoint-under-fire: ``Session.save()`` taken mid-storm — with a
+    preemption landing exactly between the save and the next round —
+    restores bit-identically and replays the remaining storm to the same
+    history as the uninterrupted run.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import (
+    ClusterSpec,
+    Experiment,
+    SimBackend,
+    TrainConfig,
+    compile_churn,
+    paper_workload,
+)
+from repro.core import GlobalBatchConfig
+from repro.het.spot import storm_market
+from repro.optim import batch_coupled, sgd
+
+
+def _storm(seed, *, workers=8, zones=2, horizon=30):
+    return storm_market(workers, zones=zones, seed=seed, horizon=horizon,
+                        degrade_rate=0.01, straggle_rate=0.02)
+
+
+def _experiment(market, churn, *, gns=False, max_steps=40, seed=0):
+    cluster = ClusterSpec.explicit(
+        market.initial_fleet(), workload="linreg", seed=seed,
+        backend=SimBackend()).with_churn(churn)
+    gb = (GlobalBatchConfig(kind="gns", warmup=4, cooldown=4,
+                            gns_min_samples=4) if gns
+          else GlobalBatchConfig())
+    return Experiment(
+        workload=paper_workload("linreg"),
+        cluster=cluster,
+        optimizer=sgd(batch_coupled(0.02, rule="linear")),
+        config=TrainConfig(b0=4, microbatch=4, batching="dynamic",
+                           max_steps=max_steps, seed=seed, global_batch=gb),
+    )
+
+
+# ------------------------------------------------------- storm invariants
+
+
+class TestStormInvariants:
+    @given(seed=st.integers(min_value=0, max_value=2**16))
+    @settings(max_examples=5, deadline=None)
+    def test_storm_conserves_global_batch(self, seed):
+        """Whatever storm the market deals, Σb_k never drifts: every
+        preempt/rejoin/straggle/reallocate re-apportions the SAME global
+        batch (fixed outer kind — the controller's conserve_global path)."""
+        m = _storm(seed)
+        churn = compile_churn(m.simulate(), min_workers=2)
+        result = _experiment(m, churn).session().run()
+        assert result["steps"] == 40
+        total0 = sum(result["history"][0].batches)
+        for rec in result["history"]:
+            assert sum(rec.batches) == total0, \
+                f"step {rec.step}: Σb_k = {sum(rec.batches)} != {total0}"
+        assert sum(result["final_batches"]) == total0
+
+    @given(seed=st.integers(min_value=0, max_value=2**16))
+    @settings(max_examples=3, deadline=None)
+    def test_storm_with_gns_outer_tracks_b_global(self, seed):
+        """With the GNS outer loop active the invariant shifts: Σb_k equals
+        the outer's CURRENT rung (``set_global_batch`` rescaling), through
+        every membership event the storm injects."""
+        m = _storm(seed)
+        churn = compile_churn(m.simulate(), min_workers=2)
+        session = _experiment(m, churn, gns=True).session()
+        result = session.run()
+        t = session.trainer
+        assert t.outer is not None
+        assert sum(result["final_batches"]) == t.outer.b_global
+        assert t.controller.global_batch == t.outer.b_global
+
+    def test_storm_actually_storms(self):
+        """Guard against a vacuous fixture: the default storm trace really
+        removes and re-adds workers while training runs."""
+        m = _storm(7)
+        churn = compile_churn(m.simulate(), min_workers=2)
+        s = churn.summary()
+        assert s.get("RemoveWorker", 0) >= 1 and s.get("AddWorker", 0) >= 1
+        session = _experiment(m, churn).session()
+        session.run()
+        kinds = {e[1] for e in session.trainer.membership_log}
+        assert "remove" in kinds and "add" in kinds
+
+
+class TestControllerStateThroughChurn:
+    def test_survivors_keep_adaptive_state_across_preempt(self):
+        m = _storm(1)
+        exp = Experiment(
+            workload=paper_workload("linreg"),
+            cluster=ClusterSpec.explicit(m.initial_fleet(),
+                                         workload="linreg",
+                                         backend=SimBackend()),
+            optimizer=sgd(batch_coupled(0.02, rule="linear")),
+            config=TrainConfig(b0=4, microbatch=4, batching="dynamic",
+                               max_steps=60, seed=0),
+        )
+        session = exp.session()
+        for _ in zip(range(20), session):
+            pass
+        t = session.trainer
+        before = [(w.b_max, w.last_throughput)
+                  for w in t.controller.workers[:-1]]
+        t.remove_worker(t.k - 1)
+        after = [(w.b_max, w.last_throughput) for w in t.controller.workers]
+        assert after == before, \
+            "preemption must not erase survivors' adaptive b_max/throughput"
+        assert sum(t.batches) == sum(session.history[0].batches)
+
+    def test_reallocate_bumps_membership_events_not_num_updates(self):
+        # resnet time model: compute-dominated iteration times, so a big
+        # slowdown visibly moves the cost-aware split (linreg at b=4 is
+        # t_sync-dominated and the allocator would correctly no-op)
+        m = _storm(1)
+        exp = Experiment(
+            workload=paper_workload("linreg"),
+            cluster=ClusterSpec.explicit(m.initial_fleet(),
+                                         workload="resnet",
+                                         backend=SimBackend()),
+            optimizer=sgd(batch_coupled(0.02, rule="linear")),
+            config=TrainConfig(b0=8, microbatch=4, batching="dynamic",
+                               max_steps=60, seed=0),
+        )
+        session = exp.session()
+        for _ in zip(range(10), session):
+            pass
+        # skew the cluster hard so the cost-aware plan MUST differ from the
+        # current split (apply_allocation no-ops when nothing changes)
+        session.trainer.slow_worker(0, 8.0)
+        c = session.trainer.controller
+        updates, events = c.num_updates, c.membership_events
+        bmax_before = [w.b_max for w in c.workers]
+        total = sum(session.trainer.batches)
+        before = list(session.trainer.batches)
+        session.trainer.reallocate_cost_aware()
+        assert session.trainer.batches != before, \
+            "an 8x slowdown must move the cost-aware split"
+        assert c.num_updates == updates, \
+            "reallocation is a membership event, not a controller update " \
+            "(num_updates is in the checkpoint state_dict)"
+        assert c.membership_events == events + 1
+        assert [w.b_max for w in c.workers] == bmax_before
+        assert sum(session.trainer.batches) == total
+
+
+# --------------------------------------------------- checkpoint under fire
+
+
+def _state_snapshot(session):
+    t = session.trainer
+    return {
+        "step": t.step_idx,
+        "batches": list(t.batches),
+        "smoothed_loss": session.smoothed_loss,
+        "controller": t.controller.state_dict(),
+        "outer": (t.outer.state_dict()
+                  if getattr(t, "outer", None) is not None else None),
+        "engine": (t.engine.version, list(t.engine.read_version)),
+        "sim": (t.sim.time, t.sim.iteration, t.sim.rng.bit_generator.state),
+    }
+
+
+class TestCheckpointUnderFire:
+    def _run_under_fire(self, tmp_path, *, gns):
+        m = _storm(5)
+        churn = compile_churn(m.simulate(), min_workers=2)
+        event_steps = sorted({ev.step for ev in churn.events})
+        save_step = next(s for s in event_steps if s >= 5)
+        path = str(tmp_path / "under-fire")
+
+        a = _experiment(m, churn, gns=gns).session()
+        for _ in a:
+            if a.step_idx >= save_step:
+                break
+        assert a.step_idx == save_step
+        a.save(path)
+        snap_a = _state_snapshot(a)
+
+        # resume fleet = the fleet as of the save (some workers already
+        # preempted, stragglers already slowed via dataclasses.replace);
+        # resume schedule = the not-yet-fired suffix, INCLUDING the event
+        # sitting exactly AT the save step — the preemption that lands
+        # between the save and the next round
+        assert any(ev.step == save_step for ev in churn.events)
+        fleet_now = list(a.trainer.sim.workers)
+        suffix = [ev for ev in churn.events if ev.step >= save_step]
+        gb = (GlobalBatchConfig(kind="gns", warmup=4, cooldown=4,
+                                gns_min_samples=4) if gns
+              else GlobalBatchConfig())
+        exp_b = Experiment(
+            workload=paper_workload("linreg"),
+            cluster=ClusterSpec.explicit(
+                fleet_now, workload="linreg",
+                backend=SimBackend()).with_schedule(*suffix),
+            optimizer=sgd(batch_coupled(0.02, rule="linear")),
+            config=TrainConfig(b0=4, microbatch=4, batching="dynamic",
+                               max_steps=40, seed=0, global_batch=gb),
+        )
+        b = exp_b.session()
+        b.restore(path)
+        snap_b = _state_snapshot(b)
+        assert snap_a == snap_b, "restore mid-storm is not bit-identical"
+
+        for _ in a:
+            pass
+        for _ in b:
+            pass
+        tail_a = [(r.step, r.loss, tuple(r.batches), r.iteration_time)
+                  for r in a.history[save_step:]]
+        tail_b = [(r.step, r.loss, tuple(r.batches), r.iteration_time)
+                  for r in b.history]
+        assert tail_a == tail_b, \
+            "resumed run diverged from the uninterrupted one"
+        # the at-step preemption replayed identically on both sides
+        log_a = [e for e in a.trainer.membership_log if e[0] >= save_step]
+        assert log_a == b.trainer.membership_log
+        assert any(e[0] == save_step for e in log_a)
+        assert _state_snapshot(a) == _state_snapshot(b)
+
+    def test_checkpoint_under_fire_fixed(self, tmp_path):
+        self._run_under_fire(tmp_path, gns=False)
+
+    def test_checkpoint_under_fire_gns_outer(self, tmp_path):
+        """Same contract with the GNS outer loop live: its EWMA moments,
+        rung position, cooldown clock and resize log all ride through the
+        mid-storm checkpoint."""
+        self._run_under_fire(tmp_path, gns=True)
+
+    def test_restore_rejects_already_fired_events(self, tmp_path):
+        """The resume guard: a schedule still containing events BEFORE the
+        checkpoint step is a config error, not a silent double-apply."""
+        m = _storm(5)
+        churn = compile_churn(m.simulate(), min_workers=2)
+        save_step = max(ev.step for ev in churn.events)
+        path = str(tmp_path / "stale")
+        a = _experiment(m, churn).session()
+        for _ in a:
+            if a.step_idx >= save_step:
+                break
+        a.save(path)
+        b = Experiment(
+            workload=paper_workload("linreg"),
+            cluster=ClusterSpec.explicit(
+                list(a.trainer.sim.workers), workload="linreg",
+                backend=SimBackend()).with_schedule(*churn.events),
+            optimizer=sgd(batch_coupled(0.02, rule="linear")),
+            config=TrainConfig(b0=4, microbatch=4, batching="dynamic",
+                               max_steps=40, seed=0),
+        ).session()
+        with pytest.raises(ValueError, match="resume past membership"):
+            b.restore(path)
+
+
+# ------------------------------------------------------------ mesh storm
+
+
+@pytest.mark.slow
+def test_mesh_churn_storm_subprocess():
+    """The mesh half of the churn contract, in a fresh interpreter so the
+    8-fake-device XLA flag lands before jax initializes: storm replay on
+    disjoint slices, §11 recompile bound, dilation staircase restore,
+    mid-storm checkpoint bit-identity, and the multi-tenant device pool.
+    See tests/churn_runner.py for the assertions."""
+    runner = os.path.join(os.path.dirname(__file__), "churn_runner.py")
+    proc = subprocess.run([sys.executable, runner], capture_output=True,
+                          text=True, timeout=900)
+    assert proc.returncode == 0, \
+        f"churn_runner failed\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "churn_runner: OK" in proc.stdout
