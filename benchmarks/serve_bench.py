@@ -1,0 +1,288 @@
+"""Production-shape serving benchmark (DESIGN.md §17).
+
+``--mode latency`` (default): the disaggregation A/B.  The SAME seeded
+Poisson arrival process (bit-identical replay, see ``serve/traffic.py``)
+is fed to the PR-5 admission path (``ContinuousBatcher``: prefill runs
+token-by-token through the decode step inside the serving loop) and to
+the disaggregated engine (``PrefillProgram`` + ``KVSlotManager``: one
+bucketed scan per prompt, decode slots fed from the handoff queue).  Both
+engines decode the same model on the same device; the CSV compares
+whole-step wall percentiles.  Prefill work hides inside step walls either
+way — disaggregation wins because a P-token admission costs one fused
+scan instead of P sequential decode calls, which is exactly what the p95
+(the steps that admit) measures.
+
+``--mode diurnal``: production-shape co-location.  A dedicated-slice
+trainer with the disaggregated engine rides a diurnal arrival envelope;
+the SLO policy must oscillate training's device count (>=1 grow AND >=1
+shrink through the membership replan path) while training still reaches
+its loss target and the controller conserves the global batch Σb_k every
+round.  The replayed trace is written as CSV (``--trace-csv``) so the run
+is auditable and replayable.
+
+Prints ``name,value,derived`` CSV like the other drivers.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--steps 60]
+    PYTHONPATH=src python benchmarks/serve_bench.py --mode diurnal
+
+Assertions are armed when ``--steps`` >= 30; CI smokes both modes with
+``--steps 6`` as wiring checks.  See ``benchmarks/README.md``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from backend_bench import _force_cpu_devices  # noqa: E402
+
+_ROWS: list = []
+
+
+def _emit(name, value, derived) -> None:
+    _ROWS.append((name, float(value), derived))
+    print(f"{name},{float(value):.4g},{derived}")
+
+
+def _pct(xs, q):
+    import numpy as np
+
+    return float(np.percentile(xs, q)) if xs else 0.0
+
+
+# --------------------------------------------------------------- latency A/B
+
+
+def _replay(engine, traffic, steps, max_drain=4000):
+    """Feed one seeded arrival stream into an engine, stepping once per
+    round, then drain; returns (per-step walls in ms, finished count)."""
+    walls = []
+    for _ in range(steps):
+        for req in traffic.next_round():
+            engine.submit(req)
+        t0 = time.perf_counter()
+        engine.step()
+        walls.append(1e3 * (time.perf_counter() - t0))
+    traffic.rate = 0.0
+    drained = 0
+    while not engine.idle:
+        t0 = time.perf_counter()
+        engine.step()
+        walls.append(1e3 * (time.perf_counter() - t0))
+        drained += 1
+        if drained > max_drain:
+            raise RuntimeError("engine failed to drain the replayed load")
+    return walls, len(engine.finished)
+
+
+def run_latency(args) -> None:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_lm, reduced
+    from repro.serve.engine import PrefillProgram, cache_length
+    from repro.serve.scheduler import ContinuousBatcher
+    from repro.serve.slots import KVSlotManager, LMShard
+    from repro.serve.traffic import make_traffic
+
+    cfg = reduced(get_config("gemma-2b"))
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    cache_len = cache_length(cfg, args.prompt_len + args.new_tokens + 2)
+
+    def traffic():
+        # same seed -> bit-identical arrivals for both engines (golden-
+        # tested in tests/test_traffic.py); prompts are ragged in
+        # [1, prompt_len] so admission cost varies per request
+        return make_traffic("poisson", rate=args.rate,
+                            prompt_len=args.prompt_len,
+                            max_new_tokens=args.new_tokens,
+                            vocab_size=cfg.vocab_size, seed=args.seed)
+
+    batcher = ContinuousBatcher(params, cfg, slots=args.slots,
+                                cache_len=cache_len)
+    batcher.warmup()
+    walls_b, fin_b = _replay(batcher, traffic(), args.steps)
+
+    shard = LMShard(params, cfg, slots=args.slots, cache_len=cache_len)
+    prefill = PrefillProgram(params, cfg, cache_len=cache_len)
+    mgr = KVSlotManager([shard], prefill, cache_len=cache_len,
+                        prefills_per_step=args.slots)
+    mgr.warmup()
+    # pre-trace the whole prefill ladder: a production engine compiles its
+    # programs before taking traffic, and the A/B times serving, not XLA
+    prefill.warmup(args.prompt_len)
+    walls_d, fin_d = _replay(mgr, traffic(), args.steps)
+    mgr.check()
+
+    p95_b, p95_d = _pct(walls_b, 95), _pct(walls_d, 95)
+    _emit("serve/requests_finished_batcher", fin_b,
+          f"{len(walls_b)} steps incl. drain")
+    _emit("serve/requests_finished_disagg", fin_d,
+          f"{len(walls_d)} steps incl. drain; "
+          f"prefill retraces={prefill.traces} of {prefill.calls} calls")
+    _emit("serve/step_ms_p50_batcher", _pct(walls_b, 50),
+          "PR-5 admission path: prefill token-by-token inside the step")
+    _emit("serve/step_ms_p50_disagg", _pct(walls_d, 50),
+          "disaggregated: bucketed prefill scan + handoff queue")
+    _emit("serve/step_ms_p95_batcher", p95_b,
+          "p95 lands on the steps that admit: P decode calls per prompt")
+    _emit("serve/step_ms_p95_disagg", p95_d,
+          "one fused scan per prompt, bounded prefills per step")
+    _emit("serve/p95_ratio", p95_d / max(p95_b, 1e-12),
+          "disagg / batcher whole-step p95 (<1 = disaggregation wins)")
+
+    if args.steps < 30:
+        _emit("serve/asserts", 0, "skipped (--steps < 30: no steady state)")
+        return
+    assert fin_b == fin_d > 0, (
+        f"engines disagree on the replayed load: {fin_b} vs {fin_d}")
+    assert p95_d < p95_b, (
+        f"disaggregated p95 {p95_d:.3f}ms should beat the admission "
+        f"path's {p95_b:.3f}ms on the same replayed arrivals")
+    _emit("serve/asserts", 1, "same load, disaggregated p95 wins")
+
+
+# ----------------------------------------------------------------- diurnal
+
+
+def run_diurnal(args, mesh) -> None:
+    from repro.api import (ClusterSpec, Experiment, MeshBackend, ServeSpec,
+                           TrainConfig, paper_workload)
+    from repro.optim import adam
+
+    period = max(8, args.steps // 3)
+    # near-zero trough + fast drain: the SLO policy's shrink arm demands
+    # full idleness (occupancy 0) for idle_patience consecutive checks, so
+    # the trough must actually empty the slots between peaks
+    serve = ServeSpec(mode="dedicated", devices=1, engine="disaggregated",
+                      traffic="diurnal", requests_per_round=0.05,
+                      peak_rate=6.0, period=period, slots=args.slots,
+                      decode_steps_per_round=4, prompt_len=args.prompt_len,
+                      max_new_tokens=args.new_tokens,
+                      slo_queue_delay=1.0, check_every=2, idle_patience=2)
+    session = Experiment(
+        workload=paper_workload("mnist-cnn"),
+        cluster=ClusterSpec.homogeneous(
+            30, args.workers, workload="mnist-cnn", seed=args.seed,
+            backend=MeshBackend(mesh=mesh, concurrent=False), serve=serve),
+        optimizer=adam(2e-3),
+        config=TrainConfig(b0=args.b0, microbatch=args.b0 // 4,
+                           batching="dynamic", init_allocation="uniform",
+                           max_steps=args.steps, seed=args.seed),
+    ).session()
+    trainer = session.trainer
+
+    losses, sums, extents = [], set(), []
+    for rec in session:
+        losses.append(rec.loss)
+        sums.add(sum(rec.batches))
+        extents.append(trainer.train_extent)
+    trace = trainer.traffic.trace()
+    if args.trace_csv:
+        with open(args.trace_csv, "w") as fh:
+            fh.write(trace.to_csv())
+        print(f"# traffic trace -> {args.trace_csv}", file=sys.stderr)
+
+    grows = [a for a in trainer.policy_log if a[1] == "grow"]
+    shrinks = [a for a in trainer.policy_log if a[1] == "shrink"]
+    # EWMA-smoothed like Session's stop criterion; target = halve the
+    # opening loss within the run, under the serve region's oscillation
+    smoothed = losses[0]
+    for x in losses[1:]:
+        smoothed = 0.1 * x + 0.9 * smoothed
+    target = 0.5 * losses[0]
+
+    _emit("serve/diurnal_rounds", len(losses),
+          f"period={period} trough={serve.requests_per_round} "
+          f"peak={serve.peak_rate}")
+    _emit("serve/diurnal_arrivals", trace.total,
+          f"seed={trace.seed} (trace replayable bit-identically)")
+    _emit("serve/policy_grow_actions", len(grows),
+          f"at steps {[s for s, _, _ in grows]}")
+    _emit("serve/policy_shrink_actions", len(shrinks),
+          f"at steps {[s for s, _, _ in shrinks]}")
+    _emit("serve/train_extent_min", min(extents),
+          f"max={max(extents)} of {trainer.data_extent} data-axis rows")
+    _emit("serve/sum_bk_values", len(sums),
+          f"distinct per-round Σb_k values: {sorted(sums)} (1 = conserved)")
+    _emit("serve/loss_final_smoothed", smoothed,
+          f"first={losses[0]:.4g} target={target:.4g}")
+    st = trainer.serve_stats()
+    _emit("serve/shards_final", st["shards"],
+          f"slots_total={st['slots_total']} "
+          f"slot_migrations={st['slot_migrations']} resumes={st['resumes']}")
+
+    if args.steps < 30:
+        _emit("serve/asserts", 0, "skipped (--steps < 30: no steady state)")
+        return
+    assert len(sums) == 1, f"global batch Σb_k drifted: {sorted(sums)}"
+    assert grows and shrinks and len(trainer.policy_log) >= 2, (
+        f"diurnal load must oscillate the device count: {trainer.policy_log}")
+    assert smoothed <= target, (
+        f"training failed to reach its loss target under oscillation: "
+        f"{smoothed:.4g} > {target:.4g}")
+    trainer.batcher.check()
+    _emit("serve/asserts", 1,
+          ">=2 policy oscillations + loss target + Σb_k conserved")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--mode", default="latency",
+                    choices=["latency", "diurnal"],
+                    help="latency = admission-path vs disaggregated A/B on "
+                         "a replayed Poisson load; diurnal = SLO-policy "
+                         "oscillation under a diurnal envelope")
+    ap.add_argument("--steps", type=int, default=60,
+                    help="replay rounds (latency) / training rounds "
+                         "(diurnal); assertions arm at >= 30")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="fake CPU devices for the diurnal debug mesh")
+    ap.add_argument("--workers", type=int, default=3)
+    ap.add_argument("--b0", type=int, default=64)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots per engine (latency) / per shard")
+    ap.add_argument("--rate", type=float, default=1.5,
+                    help="Poisson arrivals per round (latency mode)")
+    ap.add_argument("--prompt-len", type=int, default=24,
+                    help="max ragged prompt length; admission cost scales "
+                         "with it on the PR-5 path (P decode calls)")
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-csv", default=None,
+                    help="write the diurnal arrival trace here (CSV)")
+    ap.add_argument("--emit-json", default=None,
+                    help="merge rows into the per-PR perf artifact, e.g. "
+                         "BENCH_9.json (benchmarks/artifact.py)")
+    args = ap.parse_args()
+
+    _force_cpu_devices(args.devices)
+    print("name,value,derived")
+    if args.mode == "latency":
+        run_latency(args)
+    else:
+        from repro.launch.mesh import make_debug_mesh
+
+        run_diurnal(args, make_debug_mesh(args.devices))
+    if args.emit_json:
+        import jax
+
+        from benchmarks.artifact import rows_to_payload, update_bench_json
+
+        update_bench_json(
+            args.emit_json, f"serve_bench/{args.mode}", {
+                "steps": args.steps,
+                "rows": rows_to_payload(_ROWS),
+            },
+            meta={"jax": jax.__version__, "devices": args.devices})
+
+
+if __name__ == "__main__":
+    main()

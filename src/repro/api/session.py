@@ -147,6 +147,19 @@ class MetricCollector(Hook):
             "steps": result["steps"],
             "sim_time": result["sim_time"],
         }
+        serve = result.get("serve")
+        if serve is not None:
+            # the co-located decode loop's report card (DESIGN.md §13/§17)
+            # folded into the run metrics: latency, engine shape, and how
+            # often the SLO policy moved training's device count
+            self.summary["serve"] = {
+                "engine": serve.get("engine", "batcher"),
+                "requests_finished": serve["requests_finished"],
+                "decode_step_ms_p95": serve["decode_step_ms"]["p95"],
+                "queue_delay_p95": serve["queue_delay_steps"]["p95"],
+                "charged_seconds": serve["charged_seconds"],
+                "policy_moves": len(serve["policy_actions"]),
+            }
         result["metrics"] = self.summary
 
 

@@ -237,6 +237,13 @@ class DevicePool:
                            f"active: {self.tenants}")
         return self._starts()[tenant], self._leases[tenant]
 
+    def regions(self) -> dict[str, tuple[int, int]]:
+        """Every tenant's (start, length) in lease order — the full packed
+        layout in one pass (the serve-region snapshot
+        :meth:`repro.serve.slots.KVSlotManager.stats` reports, §17)."""
+        starts = self._starts()
+        return {t: (starts[t], n) for t, n in self._leases.items()}
+
     def plan(self, tenant: str, k: int,
              weights: Optional[Sequence[float]] = None) -> SlicePlan:
         """A :class:`SlicePlan` over the tenant's lease (lease-local device

@@ -101,7 +101,20 @@ def main(argv=None) -> dict:
     ap.add_argument("--serve-rate", type=float, default=1.0,
                     help="decode requests arriving per training round")
     ap.add_argument("--serve-slots", type=int, default=2,
-                    help="concurrent decode sequences (scheduler slots)")
+                    help="concurrent decode sequences (scheduler slots; "
+                         "per shard with --serve-engine disaggregated)")
+    ap.add_argument("--serve-engine", default="batcher",
+                    choices=["batcher", "disaggregated"],
+                    help="batcher = single-device continuous batcher; "
+                         "disaggregated = sharded KV slots, one decode "
+                         "shard per serve-region device behind a dedicated "
+                         "prefill program (DESIGN.md §17)")
+    ap.add_argument("--serve-traffic", default="steady",
+                    choices=["steady", "poisson", "diurnal"],
+                    help="arrival model: steady accumulator, seeded "
+                         "Poisson, or the raised-cosine diurnal envelope "
+                         "(peaks at 4x --serve-rate) that makes the SLO "
+                         "policy oscillate training's device count (§17)")
     ap.add_argument("--full-config", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
@@ -129,6 +142,8 @@ def main(argv=None) -> dict:
         serve = ServeSpec(mode=args.serve_mode, devices=args.serve_devices,
                           slots=args.serve_slots, arch=args.arch,
                           requests_per_round=args.serve_rate,
+                          engine=args.serve_engine,
+                          traffic=args.serve_traffic,
                           seed=args.seed)
     cluster = ClusterSpec.hlevel(args.total_cores, args.hlevel, args.workers,
                                  workload="transformer", seed=args.seed,

@@ -1,14 +1,28 @@
 from repro.serve.colocate import ServeSpec, ServeTraffic, SLOPolicy
 from repro.serve.engine import (
+    PrefillProgram,
     ServeConfig,
     cache_length,
+    fed_sequence,
     generate,
     prefill,
     sample,
     serve_step,
 )
 from repro.serve.scheduler import ContinuousBatcher, Request
+from repro.serve.slots import FakePrefill, FakeShard, KVSlotManager, LMShard
+from repro.serve.traffic import (
+    DiurnalTraffic,
+    PoissonTraffic,
+    QueueSim,
+    TrafficTrace,
+    make_traffic,
+    replay_latency_summary,
+)
 
-__all__ = ["ContinuousBatcher", "Request", "SLOPolicy", "ServeConfig",
-           "ServeSpec", "ServeTraffic", "cache_length", "generate",
-           "prefill", "sample", "serve_step"]
+__all__ = ["ContinuousBatcher", "DiurnalTraffic", "FakePrefill", "FakeShard",
+           "KVSlotManager", "LMShard", "PoissonTraffic", "PrefillProgram",
+           "QueueSim", "Request", "SLOPolicy", "ServeConfig", "ServeSpec",
+           "ServeTraffic", "TrafficTrace", "cache_length", "fed_sequence",
+           "generate", "make_traffic", "prefill", "replay_latency_summary",
+           "sample", "serve_step"]

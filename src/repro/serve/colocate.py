@@ -21,6 +21,7 @@ with the continuous batcher:
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
@@ -51,14 +52,29 @@ class ServeSpec:
     :class:`ServeTraffic` stream (``requests_per_round``, fractional rates
     allowed), and at most ``decode_steps_per_round`` scheduler steps run
     per training round.
+
+    PR 9 (DESIGN.md §17) adds the production shape:
+
+      * ``engine`` — ``"batcher"`` keeps the PR 5 single-device
+        :class:`~repro.serve.scheduler.ContinuousBatcher`;
+        ``"disaggregated"`` runs the sharded
+        :class:`~repro.serve.slots.KVSlotManager` (one
+        :class:`~repro.serve.slots.LMShard` per serve-region device, with
+        ``slots`` decode lanes EACH, behind a dedicated prefill program);
+      * ``traffic`` — ``"steady"`` (PR 5 accumulator), ``"poisson"``, or
+        ``"diurnal"`` (`repro.serve.traffic`); the diurnal envelope peaks
+        at ``peak_rate`` every ``period`` rounds, the preset that forces
+        the SLO policy to oscillate training's device count.
     """
 
     mode: str = "shared"             # "shared" | "dedicated"
     devices: int = 1                 # dedicated-slice width (data-axis devs)
     slots: int = 2                   # concurrent decode sequences
+    #                                  (per shard when disaggregated)
     cache_len: int = 64              # KV-cache length per slot
     arch: str = "gemma-2b"           # decode model family (reduced config)
-    requests_per_round: float = 1.0  # open-loop arrival rate
+    requests_per_round: float = 1.0  # open-loop arrival rate (trough rate
+    #                                  for the diurnal envelope)
     prompt_len: int = 4
     max_new_tokens: int = 8
     decode_steps_per_round: int = 4  # scheduler steps per training round
@@ -68,12 +84,32 @@ class ServeSpec:
     check_every: int = 5             # trainer rounds between policy checks
     idle_patience: int = 3           # idle checks before capacity returns
     seed: int = 0
+    engine: str = "batcher"          # "batcher" | "disaggregated" (§17)
+    traffic: str = "steady"          # "steady" | "poisson" | "diurnal"
+    peak_rate: Optional[float] = None  # diurnal peak (default 4× trough)
+    period: int = 32                 # diurnal period in trainer rounds
 
     def __post_init__(self) -> None:
         if self.mode not in ("shared", "dedicated"):
             raise ValueError(
                 f"serve mode must be 'shared' or 'dedicated', "
                 f"got {self.mode!r}")
+        if self.engine not in ("batcher", "disaggregated"):
+            raise ValueError(
+                f"serve engine must be 'batcher' or 'disaggregated', "
+                f"got {self.engine!r}")
+        from repro.serve.traffic import TRAFFIC_KINDS
+        if self.traffic not in TRAFFIC_KINDS:
+            raise ValueError(
+                f"traffic must be one of {TRAFFIC_KINDS}, "
+                f"got {self.traffic!r}")
+        if self.peak_rate is not None \
+                and self.peak_rate < self.requests_per_round:
+            raise ValueError(
+                f"peak_rate {self.peak_rate} must be >= the trough rate "
+                f"{self.requests_per_round}")
+        if self.period < 2:
+            raise ValueError(f"period must be >= 2 rounds, got {self.period}")
         if self.devices < 1:
             raise ValueError(f"devices must be >= 1, got {self.devices}")
         if self.slots < 1:

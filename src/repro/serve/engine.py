@@ -1,4 +1,4 @@
-"""Batched serving engine: prefill + KV-cache decode (DESIGN.md §6).
+"""Batched serving engine: prefill + KV-cache decode (DESIGN.md §6, §17).
 
 Provides the `serve_step` lowered by the decode dry-run shapes
 (decode_32k / long_500k): ONE new token against a cache of seq_len, plus a
@@ -9,6 +9,17 @@ decode path slot-by-slot, and the co-located serving trainer
 the training mesh — decode device time is what interferes with training
 there, so this module's step cost is the physical quantity the batch
 controller ends up absorbing.
+
+:class:`PrefillProgram` is the disaggregated admission path (DESIGN.md
+§17): instead of stalling the whole decode batch for L token-by-token
+full-slot dispatches (the PR 5 ``ContinuousBatcher._admit`` behaviour,
+whose admission-heavy steps dominate the decode p95), a prompt is run
+through ONE compiled B=1 scan over a geometric length ladder
+(`core.batching.bucket_up`) — per-step cache masking makes the padded tail
+a no-op, so the retrace count is bounded by the ladder length exactly like
+the training side's bucketed batches (§11).  The produced single-sequence
+cache is handed to :class:`repro.serve.slots.KVSlotManager`, which installs
+it into a free decode slot lane.
 """
 
 from __future__ import annotations
@@ -18,7 +29,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.batching import bucket_up
 from repro.models.config import ModelConfig
 from repro.models import transformer as T
 
@@ -58,6 +71,135 @@ def prefill(params, cfg: ModelConfig, tokens, cache_len: int,
 
     caches, all_logits = jax.lax.scan(body, caches, jnp.arange(s))
     return all_logits[-1], caches
+
+
+class PrefillProgram:
+    """Compiled single-sequence prefill over a bucketed length ladder.
+
+    ``run(fed)`` replays the *fed* token sequence (DESIGN.md §17: the exact
+    tokens the decode path would have consumed — the prompt for a fresh
+    request; prompt + replayed continuations for a migration resume) through
+    a jitted B=1 scan and returns ``(slot_state, position)``:
+
+      * ``slot_state`` — the per-slot cache lane (every cache leaf with the
+        batch dim stripped, per-row write index included), the unit
+        :meth:`repro.serve.slots.LMShard.install` consumes;
+      * ``position`` — ``len(fed)``, the RoPE position of the next token.
+
+    The fed length is padded up to a geometric ladder rung (``bucket_up``,
+    same recurrence as the training batches, §11) and the scan masks cache
+    updates past the true length with ``jnp.where(i < length, new, old)`` —
+    so one XLA trace per rung covers every prompt length underneath it, and
+    the padded steps leave the cache (write index included) untouched.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, cache_len: int,
+                 device=None, base: int = 4, growth: float = 1.25):
+        if device is not None:
+            params = jax.device_put(params, device)
+        self.params = params
+        self.cfg = cfg
+        self.cache_len = cache_len
+        self.device = device
+        self.base = base
+        self.growth = growth
+        self._programs: dict[int, object] = {}   # bucket -> jitted scan
+        self.calls = 0
+        self.traces = 0
+
+    def bucket_for(self, length: int) -> int:
+        return bucket_up(length, base=self.base, growth=self.growth)
+
+    def _program(self, bucket: int):
+        prog = self._programs.get(bucket)
+        if prog is not None:
+            return prog
+        cfg, cache_len = self.cfg, self.cache_len
+
+        def run(params, tokens, length):
+            caches = T.init_caches(cfg, 1, cache_len)
+
+            def body(cch, i):
+                tok = jax.lax.dynamic_slice(tokens, (i,), (1,))[None, :]
+                pos = jnp.full((1, 1), i, jnp.int32)
+                _, new, _ = T.apply_lm(params, cfg, tok, caches=cch,
+                                       positions=pos)
+                # mask the padded tail: past the true length the cache
+                # (write index included) must not advance
+                cch = jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(i < length, n, o), new, cch)
+                return cch, 0.0
+
+            caches, _ = jax.lax.scan(body, caches, jnp.arange(bucket))
+            return caches
+
+        prog = jax.jit(run)
+        self._programs[bucket] = prog
+        self.traces += 1
+        return prog
+
+    def run(self, fed) -> tuple[dict, int]:
+        fed = np.asarray(fed, dtype=np.int32)
+        if fed.ndim != 1 or fed.size < 1:
+            raise ValueError(
+                f"fed token sequence must be a non-empty 1-D array, got "
+                f"shape {fed.shape}")
+        if fed.size > self.cache_len:
+            raise ValueError(
+                f"fed sequence of {fed.size} tokens exceeds the "
+                f"{self.cache_len}-slot cache")
+        bucket = self.bucket_for(fed.size)
+        padded = np.zeros(bucket, dtype=np.int32)
+        padded[:fed.size] = fed
+        tokens = jnp.asarray(padded)
+        if self.device is not None:
+            tokens = jax.device_put(tokens, self.device)
+        caches = self._program(bucket)(
+            self.params, tokens, jnp.int32(fed.size))
+        self.calls += 1
+        # strip the B=1 batch dim -> one slot lane
+        state = jax.tree_util.tree_map(lambda leaf: leaf[:, 0], caches)
+        return state, int(fed.size)
+
+    def warmup(self, max_len: Optional[int] = None) -> None:
+        """Compile prefill programs ahead of serving (throwaway results).
+
+        Default: just the smallest rung (enough to absorb the first-call
+        compile).  With ``max_len``, every ladder rung covering prompts up
+        to that length is traced — production replay (benchmarks/
+        serve_bench.py) pre-warms the full ladder so no compile wall ever
+        lands inside a timed serving step."""
+        if max_len is None:
+            rungs = [1]
+        else:
+            max_len = min(max_len, self.cache_len)
+            rungs = sorted({self.bucket_for(n)
+                            for n in range(1, max_len + 1)})
+        for n in rungs:
+            self.run(np.zeros(min(n, self.cache_len), dtype=np.int32))
+            self.calls -= 1
+
+
+def fed_sequence(req) -> tuple[np.ndarray, int]:
+    """The token stream a request's decode has consumed so far, plus the
+    next token to feed — the replay unit for prefill and migration resume.
+
+    Matches the PR 5 admission semantics exactly (DESIGN.md §17): the
+    prompt is fed at positions ``0..L-1``, then the LAST prompt token is
+    fed again at position L to produce the first continuation, and each
+    produced token is fed back to produce the next.  So:
+
+      * fresh request  — fed = prompt,                       next = prompt[-1]
+      * after m tokens — fed = prompt + [prompt[-1]] + tokens[:m-1],
+                         next = tokens[m-1]
+    """
+    prompt = np.asarray(req.prompt, dtype=np.int32)
+    if not req.tokens:
+        return prompt, int(prompt[-1])
+    fed = np.concatenate([
+        prompt, prompt[-1:],
+        np.asarray(req.tokens[:-1], dtype=np.int32)])
+    return fed.astype(np.int32), int(req.tokens[-1])
 
 
 def serve_step(params, cfg: ModelConfig, token, caches, position):

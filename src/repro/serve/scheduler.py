@@ -19,6 +19,7 @@ SLO preemption policy consumes.
 from __future__ import annotations
 
 import dataclasses
+import time as _time
 from collections import deque
 from typing import Callable, Optional
 
@@ -71,6 +72,11 @@ class ContinuousBatcher:
         # queue-pressure signal must reflect *current* latency, not a
         # lifetime average an old burst could latch high forever
         self.recent_delays: deque[int] = deque(maxlen=64)
+        # per-step decode walls, same windowed rationale — and reset by
+        # warmup(): a device migration re-warms the batcher, and mixing
+        # pre-migration walls into the post-migration p95 would misprice
+        # the new placement for a whole window (DESIGN.md §17)
+        self.recent_step_ms: deque[float] = deque(maxlen=256)
 
         def step_fn(params, caches, token, positions, live):
             pos = positions[:, None]
@@ -99,6 +105,9 @@ class ContinuousBatcher:
         self.caches = caches
         self.positions = positions
         self._next_token = next_token
+        # latency measured on the old placement does not describe the new
+        # one — start the percentile window fresh (§17 re-warm contract)
+        self.recent_step_ms.clear()
 
     # ------------------------------------------------------------ intake
 
@@ -160,6 +169,7 @@ class ContinuousBatcher:
     def step(self) -> None:
         """Admit from the queue, decode one token for every active slot,
         retire finished requests."""
+        t0 = _time.perf_counter()
         self._admit()
         if not any(r is not None for r in self.active):
             self.step_count += 1
@@ -181,10 +191,19 @@ class ContinuousBatcher:
             else:
                 self._next_token[s] = tok
         self.step_count += 1
+        # wall includes admission work on purpose: the PR 5 admission path
+        # prefills token-by-token inside step(), and that cost showing up
+        # in the p95 is exactly what serve_bench's disaggregation A/B
+        # measures (DESIGN.md §17)
+        self.recent_step_ms.append(1e3 * (_time.perf_counter() - t0))
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(r is None for r in self.active)
 
     def run_until_idle(self, max_steps: int = 10_000) -> list[Request]:
         for _ in range(max_steps):
-            if not self.queue and all(r is None for r in self.active):
+            if self.idle:
                 break
             self.step()
         return self.finished
@@ -202,6 +221,7 @@ class ContinuousBatcher:
         # most recent admissions so the policy reacts to current pressure
         # (a lifetime mean would stay breached long after a burst drained)
         lat = list(self.recent_delays)
+        walls = list(self.recent_step_ms)
         occ = np.mean([r is not None for r in self.active]) if self.active \
             else 0.0
         return {
@@ -212,4 +232,11 @@ class ContinuousBatcher:
             "p95_queue_delay_steps": (float(np.percentile(lat, 95))
                                       if lat else 0.0),
             "occupancy_now": float(occ),
+            # decode-step wall percentiles over the post-(re)warm window
+            # only — see warmup(); pinned by the migration-window
+            # regression test in test_serve_scheduler.py
+            "p50_decode_step_ms": (float(np.percentile(walls, 50))
+                                   if walls else 0.0),
+            "p95_decode_step_ms": (float(np.percentile(walls, 95))
+                                   if walls else 0.0),
         }

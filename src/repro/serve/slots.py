@@ -1,0 +1,522 @@
+"""Sharded multi-slot decode with prefill/decode disaggregation
+(DESIGN.md §17).
+
+PR 5's :class:`~repro.serve.scheduler.ContinuousBatcher` is one decode
+program on ONE device, and its admission path stalls the whole decode batch
+for L token-by-token dispatches per prompt.  This module is the
+production-shaped replacement:
+
+  * a :class:`KVSlotManager` owns ``shards × slots_per_shard`` KV-cache
+    slots spread over a multi-device serve region — one decode shard per
+    region device, lease-backed by a :class:`repro.core.placement.DevicePool`
+    (one 1-device lease per shard, packed; shard removals shift later
+    leases down and the pool's ``migrations`` counter prices the
+    reconfiguration exactly like the training side's §16 pool);
+  * admission is **disaggregated**: prompts run through a dedicated
+    prefill program (`repro.serve.engine.PrefillProgram` — one compiled
+    B=1 scan on the bucketed length ladder) and the produced cache lane is
+    handed to the decode loop through a FIFO **handoff queue**, so decode
+    steps stay uniform (no admission-heavy steps in the p95,
+    ``benchmarks/serve_bench.py --mode latency``);
+  * grow/shrink **migrates live slots**: a removed shard's occupied slots
+    are extracted and installed into free survivor slots (cache lane +
+    write index travel together); when no free slot exists the request is
+    re-queued at the FRONT as a *resume* whose replay feeds the exact
+    token stream already consumed (`repro.serve.engine.fed_sequence`), so
+    token prefixes survive arbitrary grow/shrink interleavings — the
+    property the hypothesis tests in tests/test_serve_slots.py pin.
+
+The shard/prefill substrate is pluggable: :class:`LMShard` runs the real
+jitted decode program on a device, :class:`FakeShard`/:class:`FakePrefill`
+are pure-host deterministic stand-ins so the property tests explore long
+admission interleavings in milliseconds.
+"""
+
+from __future__ import annotations
+
+import time as _time
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.core.placement import DevicePool
+from repro.serve.engine import PrefillProgram, fed_sequence
+from repro.serve.scheduler import Request
+
+
+class LMShard:
+    """One decode shard: a fixed-shape multi-slot decode program pinned to
+    one device of the serve region.
+
+    The decode math is identical to :class:`ContinuousBatcher`'s jitted
+    step (masked greedy argmax over all slots), but admission never goes
+    through it — slots are filled by :meth:`install` from a prefilled
+    cache lane (batch-dim-stripped leaves, per-row write index included).
+    """
+
+    def __init__(self, params, cfg, *, slots: int, cache_len: int,
+                 device=None):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import transformer as T
+
+        if device is not None:
+            params = jax.device_put(params, device)
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.cache_len = cache_len
+        self.device = device
+        self.key = device if device is not None else id(self)
+        self.caches = T.init_caches(cfg, slots, cache_len)
+        if device is not None:
+            self.caches = jax.device_put(self.caches, device)
+
+        def step_fn(params, caches, token, positions, live):
+            pos = positions[:, None]
+            logits, caches, _ = T.apply_lm(params, cfg, token, caches=caches,
+                                           positions=pos)
+            nxt = jnp.argmax(logits[:, 0], axis=-1)
+            nxt = jnp.where(live, nxt, 0)
+            return nxt, caches
+
+        self._step = jax.jit(step_fn)
+        self._jnp, self._jax = jnp, jax
+
+    # ------------------------------------------------------------ slot lanes
+
+    def _is_slot_leaf(self, leaf) -> bool:
+        # cache leaves are (groups, B, ...); batch is dim 1 (the per-row
+        # write index leaf is (groups, B) and travels with the lane)
+        return leaf.ndim >= 2 and leaf.shape[1] == self.slots
+
+    def install(self, slot: int, state) -> None:
+        """Write a prefilled/extracted cache lane into ``slot``.
+
+        The lane may live on another device (the prefill program's, or the
+        source shard's before a migration) — it is re-placed here, the
+        cross-device hop of the handoff protocol (DESIGN.md §17)."""
+        jax, jnp = self._jax, self._jnp
+
+        def put(leaf, lane):
+            if not self._is_slot_leaf(leaf):
+                return leaf
+            lane = jnp.asarray(lane).astype(leaf.dtype)
+            if self.device is not None:
+                lane = jax.device_put(lane, self.device)
+            return leaf.at[:, slot].set(lane)
+
+        self.caches = jax.tree_util.tree_map(put, self.caches, state)
+
+    def extract(self, slot: int):
+        """Read ``slot``'s cache lane back to host (for migration)."""
+        return self._jax.tree_util.tree_map(
+            lambda leaf: np.asarray(leaf[:, slot])
+            if self._is_slot_leaf(leaf) else np.asarray(leaf[:, 0]) * 0,
+            self.caches)
+
+    def clear(self, slot: int) -> None:
+        self.caches = self._jax.tree_util.tree_map(
+            lambda leaf: leaf.at[:, slot].set(0)
+            if self._is_slot_leaf(leaf) else leaf, self.caches)
+
+    # ---------------------------------------------------------------- decode
+
+    def decode(self, tokens: np.ndarray, live: np.ndarray,
+               positions: np.ndarray) -> np.ndarray:
+        """One synchronized decode step over all slots (masked)."""
+        jnp = self._jnp
+        nxt, self.caches = self._step(
+            self.params, self.caches,
+            jnp.asarray(tokens.reshape(self.slots, 1)),
+            jnp.asarray(positions.astype(np.int32)),
+            jnp.asarray(live))
+        return np.asarray(nxt)
+
+    def warmup(self) -> None:
+        """Compile the decode program; restore pre-warmup cache refs so a
+        mid-flight migration re-warm never perturbs live slots."""
+        caches = self.caches
+        self.decode(np.zeros(self.slots, dtype=np.int32),
+                    np.zeros(self.slots, dtype=bool),
+                    np.zeros(self.slots, dtype=np.int32))
+        self.caches = caches
+
+
+class LMPrefill(PrefillProgram):
+    """Alias kept next to :class:`LMShard` for symmetry — the real prefill
+    substrate IS the engine's compiled program."""
+
+
+class FakeShard:
+    """Pure-host deterministic decode shard for property tests.
+
+    A slot's state is the list of tokens its decode has consumed; the next
+    token is a deterministic hash of that history, so ANY schedule of
+    installs/extracts/migrations that preserves the consumed stream also
+    preserves every future token — which is exactly the property the
+    hypothesis tests assert.
+    """
+
+    def __init__(self, *, slots: int, vocab: int = 97, key=None):
+        self.slots = slots
+        self.vocab = vocab
+        self.key = key if key is not None else id(self)
+        self._fed: list[Optional[list[int]]] = [None] * slots
+
+    @staticmethod
+    def next_token(fed: list[int], vocab: int) -> int:
+        acc = 17
+        for t in fed:
+            acc = (acc * 31 + int(t) + 1) % 1_000_003
+        return acc % vocab
+
+    def install(self, slot: int, state) -> None:
+        self._fed[slot] = list(state["fed"])
+
+    def extract(self, slot: int):
+        return {"fed": list(self._fed[slot])}
+
+    def clear(self, slot: int) -> None:
+        self._fed[slot] = None
+
+    def decode(self, tokens, live, positions) -> np.ndarray:
+        out = np.zeros(self.slots, dtype=np.int64)
+        for s in range(self.slots):
+            if live[s]:
+                self._fed[s].append(int(tokens[s]))
+                out[s] = self.next_token(self._fed[s], self.vocab)
+        return out
+
+    def warmup(self) -> None:
+        pass
+
+
+class FakePrefill:
+    """Host-side prefill matching :class:`FakeShard`'s state model."""
+
+    def __init__(self):
+        self.calls = 0
+        self.traces = 0
+
+    def run(self, fed) -> tuple[dict, int]:
+        fed = [int(t) for t in np.asarray(fed).ravel()]
+        self.calls += 1
+        return {"fed": fed}, len(fed)
+
+    def warmup(self) -> None:
+        pass
+
+
+class KVSlotManager:
+    """Sharded continuous batching behind a prefill→decode handoff queue.
+
+    Drop-in for the trainer-facing :class:`ContinuousBatcher` surface
+    (``submit`` / ``step`` / ``stats`` / ``warmup`` / ``finished`` /
+    ``queue`` / ``run_until_idle``), but the decode batch is the union of
+    every shard's slots and admission is disaggregated (module docstring).
+
+    Slot bookkeeping invariants — :meth:`check` raises on any violation,
+    and the hypothesis suite calls it after every operation:
+
+      * no aliasing: a request occupies at most one (shard, slot) and a
+        slot holds at most one request;
+      * conservation: total slots == Σ shard.slots == pool leased devices
+        × slots_per_shard; occupied + free == total at all times;
+      * no loss: submitted == finished + active + handoff + queued.
+    """
+
+    def __init__(self, shards, prefill, *, eos_id: Optional[int] = None,
+                 cache_len: Optional[int] = None, extent: Optional[int] = None,
+                 prefills_per_step: int = 1):
+        shards = list(shards)
+        if not shards:
+            raise ValueError("need at least one decode shard")
+        if prefills_per_step < 1:
+            raise ValueError("prefills_per_step must be >= 1")
+        self.prefill = prefill
+        self.eos_id = eos_id
+        self.cache_len = cache_len
+        self.prefills_per_step = prefills_per_step
+        # lease-backed region: one 1-device lease per shard, packed — the
+        # pool's migrations counter prices shard shifts on grow/shrink
+        self.pool = DevicePool(extent if extent is not None else
+                               max(len(shards), 1))
+        self.shards: dict[object, object] = {}
+        for sh in shards:
+            self.pool.lease(str(sh.key), 1)
+            self.shards[sh.key] = sh
+        self.queue: deque[Request] = deque()
+        self.handoff: deque[tuple[Request, object, int, int]] = deque()
+        self.active: dict[tuple[object, int], Request] = {}
+        self.positions: dict[tuple[object, int], int] = {}
+        self.next_token: dict[tuple[object, int], int] = {}
+        self.finished: list[Request] = []
+        self.step_count = 0
+        self.submitted = 0
+        self.slot_migrations = 0      # live lanes moved between shards
+        self.resumes = 0              # live requests re-queued for replay
+        self.recent_delays: deque[int] = deque(maxlen=64)
+        # windowed per-step decode walls: reset by warmup() so a migration
+        # re-warm never mixes pre/post-migration latencies into one p95
+        # (same contract as ContinuousBatcher.stats, DESIGN.md §17)
+        self.recent_step_ms: deque[float] = deque(maxlen=256)
+
+    # -------------------------------------------------------------- queries
+
+    @property
+    def total_slots(self) -> int:
+        return sum(sh.slots for sh in self.shards.values())
+
+    @property
+    def free_slots(self) -> int:
+        return self.total_slots - len(self.active)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.handoff and not self.active
+
+    def _slot_order(self):
+        for key, sh in self.shards.items():
+            for s in range(sh.slots):
+                yield (key, s)
+
+    def _first_free(self) -> Optional[tuple[object, int]]:
+        for slot in self._slot_order():
+            if slot not in self.active:
+                return slot
+        return None
+
+    # --------------------------------------------------------------- intake
+
+    def submit(self, req: Request) -> None:
+        req.arrived_step = self.step_count
+        self.queue.append(req)
+        self.submitted += 1
+
+    def _resubmit_front(self, req: Request) -> None:
+        """Migration fallback: replay later, keeping FIFO order ahead of
+        everything that arrived after it."""
+        self.queue.appendleft(req)
+        self.resumes += 1
+
+    def _admit(self) -> None:
+        # prefill (bounded per step — the dedicated prefill program runs a
+        # fixed budget so decode steps stay uniform), then install in FIFO
+        # handoff order into the lowest free slot
+        budget = self.prefills_per_step
+        while self.queue and budget > 0 and \
+                len(self.handoff) < self.total_slots + 1:
+            req = self.queue.popleft()
+            fed, nxt = fed_sequence(req)
+            state, position = self.prefill.run(fed)
+            self.handoff.append((req, state, position, nxt))
+            budget -= 1
+        while self.handoff:
+            slot = self._first_free()
+            if slot is None:
+                break
+            req, state, position, nxt = self.handoff.popleft()
+            key, s = slot
+            self.shards[key].install(s, state)
+            req.started_step = self.step_count if req.started_step is None \
+                else req.started_step
+            self.recent_delays.append(req.started_step - req.arrived_step)
+            self.active[slot] = req
+            self.positions[slot] = position
+            self.next_token[slot] = nxt
+
+    # ---------------------------------------------------------------- steps
+
+    def _decode_all(self) -> dict[tuple[object, int], int]:
+        """One synchronized decode step on every shard with live slots."""
+        produced: dict[tuple[object, int], int] = {}
+        for key, sh in self.shards.items():
+            tokens = np.zeros(sh.slots, dtype=np.int64)
+            live = np.zeros(sh.slots, dtype=bool)
+            positions = np.zeros(sh.slots, dtype=np.int64)
+            for s in range(sh.slots):
+                slot = (key, s)
+                if slot in self.active:
+                    tokens[s] = self.next_token[slot]
+                    live[s] = True
+                    positions[s] = self.positions[slot]
+            if not live.any():
+                continue
+            nxt = sh.decode(tokens, live, positions)
+            for s in range(sh.slots):
+                if live[s]:
+                    produced[(key, s)] = int(nxt[s])
+                    self.positions[(key, s)] += 1
+        return produced
+
+    def step(self) -> None:
+        t0 = _time.perf_counter()
+        self._admit()
+        if not self.active:
+            self.step_count += 1
+            return
+        produced = self._decode_all()
+        for slot, tok in produced.items():
+            req = self.active[slot]
+            req.tokens.append(tok)
+            limit = self.cache_len if self.cache_len is not None else 1 << 30
+            if (len(req.tokens) >= req.max_new_tokens
+                    or (self.eos_id is not None and tok == self.eos_id)
+                    or self.positions[slot] >= limit - 1):
+                req.done = True
+                self.finished.append(req)
+                self._release(slot)
+            else:
+                self.next_token[slot] = tok
+        self.step_count += 1
+        self.recent_step_ms.append(1e3 * (_time.perf_counter() - t0))
+
+    def _release(self, slot) -> None:
+        key, s = slot
+        self.shards[key].clear(s)
+        del self.active[slot], self.positions[slot], self.next_token[slot]
+
+    def run_until_idle(self, max_steps: int = 10_000) -> list[Request]:
+        for _ in range(max_steps):
+            if self.idle:
+                break
+            self.step()
+        return self.finished
+
+    # ------------------------------------------------------------ grow/shrink
+
+    def set_shards(self, shards) -> None:
+        """Reconcile the shard fleet against a new region (grow, shrink, or
+        device moves after a replan).
+
+        Kept shards must be the SAME objects (they hold live cache lanes);
+        removed shards' occupied slots migrate into free survivor slots
+        (extract → install, positions and next token carried over) and fall
+        back to a front-of-queue resume when the shrunk fleet has no free
+        slot.  The pool releases removed leases and grants new ones —
+        packed, so later shards shifting down register in
+        ``pool.migrations``.
+        """
+        shards = list(shards)
+        if not shards:
+            raise ValueError("cannot shrink the serve region to zero shards")
+        new = {sh.key: sh for sh in shards}
+        if len(new) != len(shards):
+            raise ValueError("duplicate shard keys in the new region")
+        removed = [k for k in self.shards if k not in new]
+        # stage live slots off outgoing shards first (their lanes are
+        # still installable — extraction is host-side)
+        displaced: list[tuple[Request, object, int, int]] = []
+        for key in removed:
+            sh = self.shards[key]
+            for s in range(sh.slots):
+                slot = (key, s)
+                if slot not in self.active:
+                    continue
+                displaced.append((self.active[slot], sh.extract(s),
+                                  self.positions[slot],
+                                  self.next_token[slot]))
+                del self.active[slot], self.positions[slot], \
+                    self.next_token[slot]
+            self.pool.release(str(key))
+            del self.shards[key]
+        if self.pool.extent < len(new):
+            raise ValueError(
+                f"{len(new)} shards exceed the {self.pool.extent}-device "
+                f"region the manager's pool was sized for")
+        for sh in shards:
+            if sh.key not in self.shards:
+                self.pool.lease(str(sh.key), 1)
+                self.shards[sh.key] = sh
+        # keep shard iteration (and the packed leases) in region order
+        self.shards = {sh.key: sh for sh in shards}
+        overflow = []
+        for req, state, position, nxt in displaced:
+            slot = self._first_free()
+            if slot is not None:
+                key, s = slot
+                self.shards[key].install(s, state)
+                self.active[slot] = req
+                self.positions[slot] = position
+                self.next_token[slot] = nxt
+                self.slot_migrations += 1
+            else:
+                overflow.append(req)
+        # resume at the queue FRONT (displaced requests were admitted before
+        # anything still queued), reversed so appendleft keeps their own
+        # relative order too
+        for req in reversed(overflow):
+            self._resubmit_front(req)
+
+    # ---------------------------------------------------------------- admin
+
+    def warmup(self) -> None:
+        """Compile every shard's decode program + the smallest prefill rung;
+        clears the decode-latency window (the §17 re-warm contract)."""
+        for sh in self.shards.values():
+            sh.warmup()
+        self.prefill.warmup()
+        self.recent_step_ms.clear()
+
+    def check(self) -> None:
+        """Raise if any slot-bookkeeping invariant is violated."""
+        self.pool.check()
+        if set(self.pool.tenants) != {str(k) for k in self.shards}:
+            raise AssertionError(
+                f"pool tenants {self.pool.tenants} != shards "
+                f"{[str(k) for k in self.shards]}")
+        valid = set(self._slot_order())
+        uids: dict[int, tuple] = {}
+        for slot, req in self.active.items():
+            if slot not in valid:
+                raise AssertionError(f"active slot {slot} not in any shard")
+            if req.uid in uids:
+                raise AssertionError(
+                    f"request {req.uid} aliased into {uids[req.uid]} "
+                    f"and {slot}")
+            uids[req.uid] = slot
+            if slot not in self.positions or slot not in self.next_token:
+                raise AssertionError(f"slot {slot} missing decode state")
+        if len(self.active) + self.free_slots != self.total_slots:
+            raise AssertionError("slot conservation violated")
+        accounted = (len(self.finished) + len(self.active)
+                     + len(self.handoff) + len(self.queue))
+        if accounted != self.submitted:
+            raise AssertionError(
+                f"request conservation violated: {accounted} accounted, "
+                f"{self.submitted} submitted")
+
+    # --------------------------------------------------------------- metrics
+
+    def stats(self) -> dict:
+        """SLO-policy snapshot — same keys (and windowed semantics) as
+        :meth:`ContinuousBatcher.stats`, plus the sharding counters."""
+        lat = list(self.recent_delays)
+        walls = list(self.recent_step_ms)
+        total = self.total_slots
+
+        def pct(xs, q):
+            return float(np.percentile(xs, q)) if xs else 0.0
+
+        return {
+            "finished": len(self.finished),
+            "queued": len(self.queue) + len(self.handoff),
+            "free_slots": self.free_slots,
+            "mean_queue_delay_steps": float(np.mean(lat)) if lat else 0.0,
+            "p95_queue_delay_steps": pct(lat, 95),
+            "occupancy_now": (len(self.active) / total) if total else 0.0,
+            "p50_decode_step_ms": pct(walls, 50),
+            "p95_decode_step_ms": pct(walls, 95),
+            "shards": len(self.shards),
+            "slots_total": total,
+            "lease_layout": self.pool.regions(),
+            "handoff_depth": len(self.handoff),
+            "pool_migrations": self.pool.migrations,
+            "slot_migrations": self.slot_migrations,
+            "resumes": self.resumes,
+            "prefill_calls": getattr(self.prefill, "calls", 0),
+            "prefill_traces": getattr(self.prefill, "traces", 0),
+        }

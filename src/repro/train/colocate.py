@@ -46,8 +46,11 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.placement import ServeSlice
 from repro.models import init_lm, reduced
-from repro.serve.colocate import ServeSpec, ServeTraffic, SLOPolicy
+from repro.serve.colocate import ServeSpec, SLOPolicy
+from repro.serve.engine import PrefillProgram
 from repro.serve.scheduler import ContinuousBatcher
+from repro.serve.slots import KVSlotManager, LMShard
+from repro.serve.traffic import make_traffic
 from repro.train.loop import StepRecord
 from repro.train.mesh import MeshTrainer
 
@@ -74,23 +77,50 @@ class ColocatedMeshTrainer(MeshTrainer):
         model_cfg = reduced(get_config(serve.arch))
         self.serve_model_cfg = model_cfg
         self.serve_slice: ServeSlice = self._serve_slice_now()
-        self.batcher = ContinuousBatcher(
-            init_lm(jax.random.PRNGKey(serve.seed), model_cfg), model_cfg,
-            slots=serve.slots, cache_len=serve.cache_len,
-            device=self._serve_device())
+        serve_params = init_lm(jax.random.PRNGKey(serve.seed), model_cfg)
+        self._serve_params = serve_params
+        if serve.engine == "disaggregated":
+            # one decode shard per serve-region device + a prefill program
+            # pinned to the region's first device (DESIGN.md §17)
+            region = self._serve_region_devices()
+            self.prefill = PrefillProgram(serve_params, model_cfg,
+                                          cache_len=serve.cache_len,
+                                          device=region[0])
+            shards = [LMShard(serve_params, model_cfg, slots=serve.slots,
+                              cache_len=serve.cache_len, device=d)
+                      for d in region]
+            self.batcher = KVSlotManager(
+                shards, self.prefill, eos_id=None,
+                cache_len=serve.cache_len, extent=self.data_extent)
+        else:
+            self.prefill = None
+            self.batcher = ContinuousBatcher(
+                serve_params, model_cfg,
+                slots=serve.slots, cache_len=serve.cache_len,
+                device=self._serve_device())
         # compile the decode program up front: charged interference must be
         # compile-free, like the training side's measured times (§12)
         self.batcher.warmup()
-        self.traffic = ServeTraffic(
-            rate=serve.requests_per_round, prompt_len=serve.prompt_len,
+        self.traffic = make_traffic(
+            serve.traffic, rate=serve.requests_per_round,
+            prompt_len=serve.prompt_len,
             max_new_tokens=serve.max_new_tokens,
-            vocab_size=model_cfg.vocab_size, seed=serve.seed)
+            vocab_size=model_cfg.vocab_size, seed=serve.seed,
+            peak_rate=serve.peak_rate, period=serve.period)
         self.policy = SLOPolicy(slo_queue_delay=serve.slo_queue_delay,
                                 idle_patience=serve.idle_patience)
         self.policy_log: list[tuple[int, str, int]] = []
         self._decode_walls: list[float] = []
         self._charged_seconds = 0.0
         self._round_serve_seconds = 0.0
+        # (start, end) perf_counter stamps of the last round's decode burst
+        # — compared against last_round_stamps by the concurrency test
+        # (tests/serve_runner.py) to prove decode genuinely overlapped the
+        # in-flight training round on disjoint hardware
+        self.last_serve_window: tuple[float, float] | None = None
+        # decode seconds charged (shared) or overlapped (dedicated) each
+        # round, aligned with the trainer's step history
+        self.round_charges: list[float] = []
 
     # ------------------------------------------------------ serve placement
 
@@ -116,10 +146,44 @@ class ColocatedMeshTrainer(MeshTrainer):
         pinned there (`ContinuousBatcher(device=...)`)."""
         return np.ravel(self._flat_devices[self.serve_slice.start])[0]
 
+    def _serve_region_devices(self) -> list:
+        """One device per serve-slice row — the disaggregated engine's
+        shard placement (DESIGN.md §17)."""
+        sl = self.serve_slice
+        return self.slice_devices(sl.start, sl.length)
+
     def _replace_serve(self) -> None:
-        """Re-derive the serve slice after a replan; migrate the batcher
-        (params + live KV caches) if its device moved."""
+        """Re-derive the serve slice after a replan; migrate the decode
+        engine if its devices moved.
+
+        Batcher engine: one device — re-pin params + live KV caches and
+        re-warm.  Disaggregated engine: reconcile the shard fleet against
+        the new region by DEVICE identity — shards whose device is still
+        in the region are kept live (their KV lanes untouched), removed
+        shards' occupied slots migrate or resume through
+        :meth:`KVSlotManager.set_shards`, new region devices get fresh
+        shards.  Either way the engine re-warms, which also resets its
+        decode-latency percentile window (§17 re-warm contract).
+        """
         self.serve_slice = self._serve_slice_now()
+        if self.serve_spec.engine == "disaggregated":
+            region = self._serve_region_devices()
+            keep = {sh.key: sh for sh in self.batcher.shards.values()}
+            changed = set(keep) != set(region)
+            shards = [keep.get(d) or LMShard(
+                self._serve_params, self.serve_model_cfg,
+                slots=self.serve_spec.slots,
+                cache_len=self.serve_spec.cache_len, device=d)
+                for d in region]
+            if not changed:
+                return
+            self.batcher.set_shards(shards)
+            if self.prefill.device is not region[0]:
+                self.prefill.device = region[0]
+                self.prefill.params = jax.device_put(
+                    self.prefill.params, region[0])
+            self.batcher.warmup()
+            return
         dev = self._serve_device()
         if dev is not self.batcher.device:
             self.batcher.device = dev
@@ -165,19 +229,26 @@ class ColocatedMeshTrainer(MeshTrainer):
         for req in self.traffic.next_round():
             self.batcher.submit(req)
         b = self.batcher
-        if not b.queue and all(r is None for r in b.active):
+        if b.idle:
             return 0.0
         budget = self.serve_spec.decode_steps_per_round
-        if self.serve_slice.dedicated:
+        if self.serve_slice.dedicated \
+                and self.serve_spec.engine != "disaggregated":
+            # single-device batcher: a wider slice only buys throughput by
+            # running MORE steps.  The disaggregated engine's step already
+            # decodes every shard in the region, so its throughput scales
+            # with the region width at constant budget.
             budget *= self.serve_slice.length
         t0 = _time.perf_counter()
         for _ in range(budget):
-            if not b.queue and all(r is None for r in b.active):
+            if b.idle:
                 break
             t1 = _time.perf_counter()
             b.step()
             self._decode_walls.append(_time.perf_counter() - t1)
-        return _time.perf_counter() - t0
+        t_end = _time.perf_counter()
+        self.last_serve_window = (t0, t_end)
+        return t_end - t0
 
     def _round_concurrent(self):
         if self.serve_slice.dedicated:
@@ -229,6 +300,7 @@ class ColocatedMeshTrainer(MeshTrainer):
     def bsp_step(self) -> StepRecord:
         self._round_serve_seconds = 0.0
         rec = super().bsp_step()
+        self.round_charges.append(self._round_serve_seconds)
         self._maybe_apply_policy()
         return rec
 
@@ -268,8 +340,10 @@ class ColocatedMeshTrainer(MeshTrainer):
                   for r in self.batcher.finished
                   if r.started_step is not None]
         stats = self.batcher.stats()
-        return {
+        out = {
             "mode": self.serve_spec.mode,
+            "engine": self.serve_spec.engine,
+            "traffic": self.serve_spec.traffic,
             "serve_slice": (self.serve_slice.start, self.serve_slice.length),
             "shared_with": self.serve_slice.shared_with,
             "reserve": self.reserve,
@@ -279,6 +353,12 @@ class ColocatedMeshTrainer(MeshTrainer):
             "decode_steps": len(walls_ms),
             "decode_step_ms": {"p50": pct(50), "p95": pct(95),
                                "p99": pct(99)},
+            # windowed view (post-re-warm only, §17) — the engine's own
+            # percentile window, distinct from the whole-run walls above
+            "decode_step_ms_windowed": {
+                "p50": stats.get("p50_decode_step_ms", 0.0),
+                "p95": stats.get("p95_decode_step_ms", 0.0),
+            },
             "queue_delay_steps": {
                 "mean": float(np.mean(delays)) if delays else 0.0,
                 "p95": (float(np.percentile(delays, 95))
@@ -287,3 +367,12 @@ class ColocatedMeshTrainer(MeshTrainer):
             "charged_seconds": self._charged_seconds,
             "policy_actions": list(self.policy_log),
         }
+        if self.serve_spec.engine == "disaggregated":
+            out["shards"] = stats["shards"]
+            out["slots_total"] = stats["slots_total"]
+            out["slot_migrations"] = stats["slot_migrations"]
+            out["pool_migrations"] = stats["pool_migrations"]
+            out["resumes"] = stats["resumes"]
+            out["prefill"] = {"calls": stats["prefill_calls"],
+                              "traces": stats["prefill_traces"]}
+        return out

@@ -889,6 +889,21 @@ class MeshTrainer(OuterBatchMixin):
             self.batches = plan
         return self.batches
 
+    def slice_devices(self, start: int, length: int) -> list:
+        """First device of each data-axis row in ``[start, start+length)``.
+
+        The serve region's per-row placement handles (DESIGN.md §17): the
+        disaggregated decode path pins one :class:`repro.serve.slots.LMShard`
+        per row, so the sharded KV slots genuinely live on distinct devices
+        of the carved region rather than all on its first device.
+        """
+        if start < 0 or length < 1 or start + length > self.data_extent:
+            raise ValueError(
+                f"rows [{start}, {start + length}) outside the "
+                f"{self.data_extent}-row data axis")
+        return [np.ravel(self._flat_devices[i])[0]
+                for i in range(start, start + length)]
+
     def set_reserve(self, n: int) -> None:
         """Resize the reserved serve region at the top of the data axis.
 

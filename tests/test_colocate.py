@@ -171,10 +171,19 @@ class TestServeSpec:
         {"cache_len": 4, "prompt_len": 4},
         {"decode_steps_per_round": 0},
         {"check_every": 0},
+        {"engine": "turbo"},
+        {"traffic": "bursty"},
+        {"peak_rate": 0.5, "requests_per_round": 1.0},
+        {"period": 1},
     ])
     def test_rejects_bad_fields(self, kw):
         with pytest.raises(ValueError):
             ServeSpec(**kw)
+
+    def test_production_shape_fields(self):
+        sp = ServeSpec(engine="disaggregated", traffic="diurnal",
+                       peak_rate=4.0, period=16)
+        assert sp.engine == "disaggregated" and sp.traffic == "diurnal"
 
 
 # -------------------------------------------- batcher stats / empty queue
@@ -331,3 +340,21 @@ def test_dedicated_grow_shrink_on_debug_mesh():
         capture_output=True, text=True, timeout=900)
     assert proc.returncode == 0, f"\n{proc.stdout}\n{proc.stderr}"
     assert "colocate_runner: OK" in proc.stdout
+
+
+def test_production_serving_on_debug_mesh():
+    """Production-shape serving (DESIGN.md §17) on 8 fake devices: decode
+    genuinely overlaps the in-flight training round, the contended worker's
+    recorded time carries the interference charge, sharded decode lives on
+    devices disjoint from every training slice, and the shard fleet
+    reconciles through set_reserve with requests live."""
+    import os
+    import subprocess
+    import sys
+
+    here = os.path.dirname(__file__)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(here, "serve_runner.py")],
+        capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, f"\n{proc.stdout}\n{proc.stderr}"
+    assert "serve_runner: OK" in proc.stdout

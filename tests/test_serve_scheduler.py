@@ -71,6 +71,37 @@ def test_interleaved_requests_are_isolated():
         assert by_uid[uid] == want, f"request {uid} corrupted by batching"
 
 
+def test_migration_rewarm_resets_decode_latency_window():
+    """Regression (DESIGN.md §17): a device migration re-warms the batcher,
+    and the decode-step latency window must restart — mixing pre-migration
+    walls into the post-migration p95 would misprice the new placement for
+    a whole window (the SLO policy would keep reacting to a device the
+    batcher no longer runs on)."""
+    rng = np.random.default_rng(5)
+    sched = ContinuousBatcher(PARAMS, CFG, slots=2, cache_len=32)
+    sched.submit(Request(uid=0, prompt=rng.integers(0, CFG.vocab_size,
+                                                    size=3),
+                         max_new_tokens=4))
+    sched.run_until_idle()
+    assert len(sched.recent_step_ms) > 0
+    assert sched.stats()["p95_decode_step_ms"] > 0.0
+    # stand in for a slow pre-migration device: without the re-warm reset,
+    # these walls would dominate the post-migration p95
+    sched.recent_step_ms.extend([1e6] * 8)
+    assert sched.stats()["p95_decode_step_ms"] > 1e5
+    sched.warmup()                   # what _replace_serve runs on migration
+    assert len(sched.recent_step_ms) == 0
+    assert sched.stats()["p95_decode_step_ms"] == 0.0
+    # post-migration steps repopulate the window with fresh walls only
+    sched.submit(Request(uid=1, prompt=rng.integers(0, CFG.vocab_size,
+                                                    size=3),
+                         max_new_tokens=4))
+    sched.run_until_idle()
+    assert 0.0 < sched.stats()["p95_decode_step_ms"] < 1e5
+    # the admission-delay window survives (only step walls are re-placed)
+    assert sched.stats()["finished"] == 2
+
+
 def test_queue_overflow_waits():
     rng = np.random.default_rng(2)
     sched = ContinuousBatcher(PARAMS, CFG, slots=1, cache_len=32)

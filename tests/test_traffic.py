@@ -1,0 +1,189 @@
+"""Seeded traffic-replay tests (DESIGN.md §17).
+
+Goldens: the arrival process is seeded, so the SAME seed must replay a
+bit-identical trace and an integer-exact latency-percentile summary — the
+pinned literals below were produced by the implementation under test and
+freeze its behavior (a NumPy generator change would surface here, loudly,
+not as silent benchmark drift).  Dynamics: the diurnal preset must force
+the SLO policy through at least one grow AND one shrink within a test-
+sized horizon, which is the property the serve bench's oscillation
+assertion scales up on the real mesh.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serve.colocate import ServeTraffic, SLOPolicy
+from repro.serve.traffic import (
+    DiurnalTraffic,
+    PoissonTraffic,
+    QueueSim,
+    TrafficTrace,
+    make_traffic,
+    replay_latency_summary,
+)
+
+
+def mk(kind, **kw):
+    base = dict(rate=2.0, prompt_len=8, max_new_tokens=4, vocab_size=97,
+                seed=42)
+    base.update(kw)
+    return make_traffic(kind, **base)
+
+
+# ----------------------------------------------------------------- goldens
+
+
+POISSON_GOLDEN = (4, 1, 3, 2, 3, 0, 4, 1, 2, 3, 2, 3, 1, 3, 1, 2, 3, 1, 2, 3)
+
+DIURNAL_SUMMARY_GOLDEN = {
+    "admitted": 48,
+    "finished": 45,
+    "wait_mean": 16.729166666666668,
+    "wait_p50": 16.0,
+    "wait_p95": 34.65,
+    "wait_p99": 35.0,
+    "wait_max": 35.0,
+}
+
+
+def test_poisson_trace_is_golden():
+    t = mk("poisson")
+    for _ in range(20):
+        t.next_round()
+    trace = t.trace()
+    assert trace.arrivals == POISSON_GOLDEN
+    assert trace.rates == (2.0,) * 20
+    assert trace.kind == "poisson" and trace.seed == 42
+    assert trace.rounds == 20 and trace.total == sum(POISSON_GOLDEN)
+
+
+def test_same_seed_bit_identical_requests():
+    a, b = mk("poisson"), mk("poisson")
+    for _ in range(10):
+        ra, rb = a.next_round(), b.next_round()
+        assert [r.prompt.tolist() for r in ra] == \
+            [r.prompt.tolist() for r in rb]
+        assert [r.uid for r in ra] == [r.uid for r in rb]
+    assert a.trace() == b.trace()
+
+
+def test_different_seed_diverges():
+    a, b = mk("poisson"), mk("poisson", seed=43)
+    for _ in range(20):
+        a.next_round(), b.next_round()
+    assert a.trace().arrivals != b.trace().arrivals
+
+
+def test_diurnal_latency_summary_is_golden():
+    t = make_traffic("diurnal", rate=0.5, peak_rate=6.0, period=16,
+                     prompt_len=8, max_new_tokens=4, vocab_size=97, seed=7)
+    summary = replay_latency_summary(t, 48, slots=4, tokens_per_request=4)
+    assert summary == DIURNAL_SUMMARY_GOLDEN
+
+
+def test_trace_csv_format():
+    t = mk("poisson")
+    t.next_round(), t.next_round()
+    csv = t.trace().to_csv()
+    lines = csv.strip().split("\n")
+    assert lines[0] == "round,rate,arrivals"
+    assert lines[1] == f"0,2,{POISSON_GOLDEN[0]}"
+    assert len(lines) == 3
+
+
+def test_diurnal_envelope_shape():
+    """Troughs at ``rate`` on round 0 and each full period; peak at
+    ``peak_rate`` half a period in."""
+    t = make_traffic("diurnal", rate=1.0, peak_rate=9.0, period=8,
+                     prompt_len=4, max_new_tokens=2, vocab_size=97)
+    rates = []
+    for _ in range(17):
+        t.next_round()
+        rates.append(t.trace().rates[-1])
+    assert rates[0] == pytest.approx(1.0)
+    assert rates[4] == pytest.approx(9.0)
+    assert rates[8] == pytest.approx(1.0)
+    assert rates[12] == pytest.approx(9.0)
+    assert all(1.0 <= r <= 9.0 for r in rates)
+
+
+# ------------------------------------------------------- policy dynamics
+
+
+def test_diurnal_preset_forces_grow_and_shrink():
+    """One diurnal period through the SLO policy on the host queue model:
+    the peak must force >=1 grow and the trough >=1 shrink — the
+    oscillation the serve bench then demands of the real trainer."""
+    t = make_traffic("diurnal", rate=0.0, peak_rate=8.0, period=24,
+                     prompt_len=4, max_new_tokens=2, vocab_size=97, seed=0)
+    sim = QueueSim(slots=2, tokens_per_request=3)
+    policy = SLOPolicy(slo_queue_delay=1.0, idle_patience=2)
+    actions = []
+    for _ in range(48):
+        sim.step(len(t.next_round()))
+        action = policy.decide(sim.stats())
+        if action == "grow":
+            sim.slots += 2           # one more shard's worth of capacity
+        elif action == "shrink":
+            sim.slots = max(2, sim.slots - 2)
+        if action != "hold":
+            actions.append(action)
+    assert "grow" in actions, f"peak never grew capacity: {actions}"
+    assert "shrink" in actions, f"trough never shrank capacity: {actions}"
+
+
+def test_drain_idiom_via_zero_rate():
+    """Tests drain queues by zeroing the rate mid-run — the Poisson and
+    diurnal generators must honor it like ServeTraffic does."""
+    t = make_traffic("diurnal", rate=2.0, peak_rate=8.0, period=8,
+                     prompt_len=4, max_new_tokens=2, vocab_size=97)
+    t.next_round()
+    t.rate = t.peak_rate = 0.0
+    assert all(len(t.next_round()) == 0 for _ in range(8))
+
+
+# ------------------------------------------------------------- unit edges
+
+
+def test_make_traffic_kinds_and_validation():
+    assert isinstance(mk("steady"), ServeTraffic)
+    assert isinstance(mk("poisson"), PoissonTraffic)
+    d = mk("diurnal")
+    assert isinstance(d, DiurnalTraffic)
+    assert d.peak_rate == pytest.approx(8.0)     # default 4x trough
+    with pytest.raises(ValueError, match="kind"):
+        mk("bursty")
+    with pytest.raises(ValueError, match="peak_rate"):
+        mk("diurnal", peak_rate=0.5)
+    with pytest.raises(ValueError, match="period"):
+        mk("diurnal", period=1)
+    with pytest.raises(ValueError, match="rate"):
+        mk("poisson", rate=-1.0)
+
+
+def test_ragged_prompts_within_bounds():
+    t = mk("poisson", rate=4.0)
+    lens = set()
+    for _ in range(20):
+        for r in t.next_round():
+            lens.add(len(r.prompt))
+    assert lens and min(lens) >= 1 and max(lens) <= 8
+    assert len(lens) > 1, "ragged prompts should vary in length"
+
+
+def test_queue_sim_stats_contract():
+    sim = QueueSim(slots=2, tokens_per_request=2)
+    sim.step(3)
+    stats = sim.stats()
+    assert stats["queued"] == 1 and stats["free_slots"] == 0
+    assert stats["occupancy_now"] == 1.0
+    assert SLOPolicy().decide(stats) == "grow"   # backlog, zero free slots
+    with pytest.raises(ValueError):
+        QueueSim(slots=0, tokens_per_request=1)
+
+
+def test_trace_is_frozen():
+    trace = TrafficTrace(kind="poisson", seed=0, rates=(1.0,), arrivals=(2,))
+    with pytest.raises(Exception):
+        trace.arrivals = (3,)
