@@ -10,13 +10,27 @@ The file is a flat object of named sections; benchmark drivers each own a
 section and merge into the file (so ``backend_bench.py`` and
 ``kernel_bench.py`` can both contribute to the same artifact without
 clobbering each other).
+
+Run as a CLI to work with the whole stack of artifacts:
+
+  python benchmarks/artifact.py --check BENCH_10.json     # schema gate (CI)
+  python benchmarks/artifact.py --merge                   # trajectory view
+
+``--merge`` folds every ``BENCH_<pr>.json`` at the repo root into ONE
+document keyed by row name, each row carrying its per-PR value series in
+stack order — the cross-PR trajectory that previously had to be diffed by
+hand, file against file.
 """
 
 from __future__ import annotations
 
+import argparse
+import glob
 import json
 import os
 import platform
+import re
+import sys
 from typing import Optional
 
 
@@ -54,3 +68,107 @@ def rows_to_payload(rows: list) -> dict:
     agree)."""
     return {name: {"value": float(value), "derived": str(derived)}
             for name, value, derived in rows}
+
+
+# --------------------------------------------------- stack-level tooling
+
+_BENCH_RE = re.compile(r"BENCH_(\d+)\.json$")
+
+
+def check_artifact(path: str) -> dict:
+    """Schema gate for one artifact; raises ``ValueError`` with the exact
+    defect (CI runs this against the artifact a PR claims to commit)."""
+    if not os.path.exists(path):
+        raise ValueError(f"{path}: artifact missing (must be committed)")
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, dict) or not isinstance(data.get("meta"), dict):
+        raise ValueError(f"{path}: top level must be an object with 'meta'")
+    for key in ("artifact", "platform", "python"):
+        if key not in data["meta"]:
+            raise ValueError(f"{path}: meta.{key} missing")
+    sections = {k: v for k, v in data.items() if k != "meta"}
+    if not sections:
+        raise ValueError(f"{path}: no benchmark sections besides meta")
+    for name, section in sections.items():
+        if not isinstance(section, dict) or "rows" not in section:
+            raise ValueError(f"{path}: section {name!r} has no 'rows'")
+        if not section["rows"]:
+            raise ValueError(f"{path}: section {name!r} has empty rows")
+        for row, cell in section["rows"].items():
+            if not isinstance(cell, dict) or not isinstance(
+                    cell.get("value"), (int, float)):
+                raise ValueError(
+                    f"{path}: row {name}/{row} needs a numeric 'value'")
+            if not isinstance(cell.get("derived"), str):
+                raise ValueError(
+                    f"{path}: row {name}/{row} needs a 'derived' string")
+    return data
+
+
+def find_artifacts(root: str) -> list:
+    """``(pr_number, path)`` for every BENCH_<pr>.json under ``root``, in
+    stack order."""
+    found = []
+    for path in glob.glob(os.path.join(root, "BENCH_*.json")):
+        m = _BENCH_RE.search(os.path.basename(path))
+        if m:
+            found.append((int(m.group(1)), path))
+    return sorted(found)
+
+
+def merge_trajectory(root: str) -> dict:
+    """Fold every artifact at ``root`` into one per-row trajectory view.
+
+    Each row name maps to its value series across the PR stack — the
+    number moving through PRs 6, 7, 8, ... — so a perf regression shows
+    up as a kink in one series instead of a diff between two files.
+    """
+    artifacts = find_artifacts(root)
+    if not artifacts:
+        raise ValueError(f"no BENCH_<pr>.json artifacts under {root}")
+    rows: dict = {}
+    for pr, path in artifacts:
+        data = check_artifact(path)
+        for name, section in data.items():
+            if name == "meta":
+                continue
+            for row, cell in section["rows"].items():
+                rows.setdefault(row, {"section": name, "series": []})
+                rows[row]["series"].append(
+                    {"pr": pr, "value": cell["value"],
+                     "derived": cell["derived"]})
+    return {"artifacts": [f"BENCH_{pr}" for pr, _ in artifacts],
+            "rows": dict(sorted(rows.items()))}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", nargs="+", metavar="PATH",
+                    help="schema-validate artifacts; non-zero exit on defect")
+    ap.add_argument("--merge", action="store_true",
+                    help="print the cross-PR trajectory view as JSON")
+    ap.add_argument("--root", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), ".."),
+        help="repo root to scan for BENCH_<pr>.json (default: repo root)")
+    ap.add_argument("--out", help="also write the merged view to this path")
+    args = ap.parse_args(argv)
+    if not args.check and not args.merge:
+        ap.error("nothing to do: pass --check and/or --merge")
+    if args.check:
+        for path in args.check:
+            check_artifact(path)
+            print(f"{path}: OK")
+    if args.merge:
+        view = merge_trajectory(args.root)
+        text = json.dumps(view, indent=2, sort_keys=True) + "\n"
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(text)
+        else:
+            sys.stdout.write(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -52,10 +52,22 @@ def _emit(name, value, derived) -> None:
 def _outer_config(kind: str, args):
     from repro.core import GlobalBatchConfig
 
-    return GlobalBatchConfig(
-        kind=kind, max_factor=args.max_factor, ladder_growth=args.growth,
+    if kind == "fixed":
+        return GlobalBatchConfig()
+    common = dict(
+        max_factor=args.max_factor, ladder_growth=args.growth,
         warmup=args.warmup, cooldown=args.cooldown,
-        gns_min_samples=4, hysteresis=0.25)
+        gns_min_samples=4, hysteresis=0.25, seed=args.seed)
+    if kind == "bandit":
+        return GlobalBatchConfig(kind="bandit", bandit_window=args.window,
+                                 **common)
+    if kind == "dynamix":
+        # the replay-seeded prior arrives pretrained (§18), so the policy
+        # runs a tighter cadence than the cold-start controllers
+        common.update(warmup=args.dynamix_warmup)
+        return GlobalBatchConfig(kind="dynamix",
+                                 bandit_window=args.dynamix_window, **common)
+    return GlobalBatchConfig(kind=kind, **common)
 
 
 def _run_sim(kind: str, args) -> dict:
@@ -198,6 +210,132 @@ def run_compare(args, mesh) -> None:
           f"+ mesh recompiles within ladder bound")
 
 
+def _storm_run(kind: str, args):
+    """One arm of the churn-storm leg: the same compiled preemption storm
+    (prices, capacity churn) replayed under outer ``kind``."""
+    from repro.api import (ClusterSpec, Experiment, SimBackend, TrainConfig,
+                           compile_churn, paper_workload)
+    from repro.het.spot import storm_market
+    from repro.optim import batch_coupled, sgd
+
+    market = storm_market(args.workers, zones=2, seed=args.seed + 6,
+                          horizon=args.steps, volatility=0.3,
+                          spike_rate=0.25, degrade_rate=0.05,
+                          straggle_rate=0.08)
+    churn = compile_churn(market.simulate(),
+                          min_workers=max(2, args.workers // 2))
+    cluster = ClusterSpec.explicit(
+        market.initial_fleet(), workload="linreg", seed=args.seed,
+        backend=SimBackend()).with_churn(churn)
+    exp = Experiment(
+        workload=paper_workload("linreg"),
+        cluster=cluster,
+        optimizer=sgd(batch_coupled(args.lr, rule="linear")),
+        config=TrainConfig(b0=args.b0, microbatch=args.b0,
+                           batching="dynamic", max_steps=args.steps,
+                           seed=args.seed,
+                           global_batch=_outer_config(kind, args)),
+    )
+    session = exp.session()
+    out = session.run()
+    out["trainer"] = session.trainer
+    return out
+
+
+def run_race(args, mesh) -> None:
+    """Four-way outer-loop race (ISSUE 10): fixed vs gns vs bandit vs
+    dynamix on the same seeded sim, plus a churn-storm leg with live
+    price/capacity context and a mesh dynamix leg under the §11 bound."""
+    runs = {kind: _run_sim(kind, args)
+            for kind in ("fixed", "gns", "bandit", "dynamix")}
+    if args.csv:
+        _write_trace_csv(args.csv, runs)
+
+    target = runs["fixed"]["final_loss"] * (1.0 + args.target_slack)
+    times = {}
+    for kind, out in runs.items():
+        times[kind] = _time_to_loss(out["history"], target)
+        _emit(f"race/{kind}/final_loss", out["final_loss"],
+              f"sim_time={out['sim_time']:.4g}s final "
+              f"B_global={sum(out['final_batches'])} "
+              f"outer_resizes={out['outer_resizes']}")
+        _emit(f"race/{kind}/time_to_target",
+              times[kind] if math.isfinite(times[kind]) else -1.0,
+              f"simulated seconds to the fixed arm's final loss "
+              f"<={target:.4g} (-1 = never)")
+    dyn_outer = runs["dynamix"]["trainer"].outer
+    _emit("race/dynamix/decisions", dyn_outer.decisions,
+          f"action_log={dyn_outer.action_log} "
+          f"resize_log={dyn_outer.resize_log}")
+
+    # -------------------------------------------------- churn-storm leg
+    storm = {kind: _storm_run(kind, args) for kind in ("bandit", "dynamix")}
+    storm_target = max(s["final_loss"] for s in storm.values()) \
+        * (1.0 + args.target_slack)
+    storm_t = {}
+    for kind, out in storm.items():
+        storm_t[kind] = _time_to_loss(out["history"], storm_target)
+        _emit(f"race/storm/{kind}/time_to_target",
+              storm_t[kind] if math.isfinite(storm_t[kind]) else -1.0,
+              f"simulated seconds to loss<={storm_target:.4g} under the "
+              f"same preemption storm (final_loss={out['final_loss']:.4g} "
+              f"resizes={out['outer_resizes']})")
+
+    # ---------------------------------------------------- mesh dynamix
+    from repro.api import (ClusterSpec, Experiment, MeshBackend, TrainConfig,
+                           paper_workload)
+    from repro.optim import batch_coupled, sgd
+
+    exp = Experiment(
+        workload=paper_workload("linreg"),
+        cluster=ClusterSpec.hlevel(24, args.hlevel, args.workers,
+                                   workload="linreg", seed=args.seed,
+                                   backend=MeshBackend(
+                                       mesh=mesh, dilation="from-spec",
+                                       growth=args.growth)),
+        optimizer=sgd(batch_coupled(args.lr, rule="linear")),
+        config=TrainConfig(b0=args.b0, microbatch=args.b0,
+                           batching="dynamic", max_steps=args.steps,
+                           seed=args.seed,
+                           global_batch=_outer_config("dynamix", args)),
+    )
+    session = exp.session()
+    out = session.run()
+    trainer = session.trainer
+    per_worker = [sorted(b) for b in trainer.worker_buckets]
+    worst = max(len(b) for b in per_worker)
+    bound = max(
+        math.ceil(math.log(b[-1] / b[0], args.growth)) + 1 if len(b) > 1
+        else 1 for b in per_worker)
+    _emit("race/mesh/dynamix_resizes", out["outer_resizes"],
+          f"final_batches={out['final_batches']}")
+    _emit("race/mesh/buckets_per_worker_max", worst,
+          f"ladder_bound={bound} buckets={per_worker}")
+    assert worst <= bound, (
+        f"dynamix outer resizes blew the §11 ladder bound: "
+        f"{worst} > {bound} ({per_worker})")
+
+    if args.steps < 30:
+        _emit("race/asserts", 0, "skipped (--steps < 30: no steady state)")
+        return
+    t_gns, t_dyn = times["gns"], times["dynamix"]
+    assert math.isfinite(t_dyn), \
+        "dynamix never reached the fixed arm's final loss"
+    assert t_dyn <= t_gns, (
+        f"dynamix must reach the fixed arm's final loss at least as fast "
+        f"as gns (sim seconds): dynamix={t_dyn:.4g}s gns={t_gns:.4g}s")
+    assert math.isfinite(storm_t["dynamix"]) and \
+        storm_t["dynamix"] < storm_t["bandit"], (
+        f"dynamix must strictly beat the bandit under the preemption "
+        f"storm: dynamix={storm_t['dynamix']:.4g}s "
+        f"bandit={storm_t['bandit']:.4g}s")
+    _emit("race/asserts", 1,
+          f"dynamix<=gns to loss<={target:.4g} "
+          f"({t_dyn:.4g}s vs {t_gns:.4g}s) + dynamix beat bandit under "
+          f"the storm ({storm_t['dynamix']:.4g}s vs "
+          f"{storm_t['bandit']:.4g}s) + mesh recompiles within bound")
+
+
 def run_resume(args, mesh) -> None:
     """Mesh outer-state checkpoint: run gns → save → restore → assert the
     outer controller state round-trips bit-identically → continue."""
@@ -249,9 +387,11 @@ def run_resume(args, mesh) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--mode", default="compare",
-                    choices=["compare", "resume"],
+                    choices=["compare", "resume", "race"],
                     help="compare = fixed-vs-gns sim race + mesh recompile "
-                         "bound; resume = mesh outer-state checkpoint check")
+                         "bound; resume = mesh outer-state checkpoint check; "
+                         "race = fixed/gns/bandit/dynamix four-way + "
+                         "churn-storm leg + mesh dynamix (ISSUE 10)")
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--devices", type=int, default=8,
                     help="fake CPU devices for the debug mesh")
@@ -270,6 +410,13 @@ def main() -> None:
     ap.add_argument("--max-factor", type=float, default=8.0)
     ap.add_argument("--warmup", type=int, default=6)
     ap.add_argument("--cooldown", type=int, default=3)
+    ap.add_argument("--window", type=int, default=4,
+                    help="bandit decision window (steps per episode)")
+    ap.add_argument("--dynamix-window", type=int, default=3,
+                    help="dynamix decision window — tighter than the bandit "
+                         "because the seeded prior needs no cold start")
+    ap.add_argument("--dynamix-warmup", type=int, default=4,
+                    help="dynamix warmup before the first resize")
     ap.add_argument("--target-slack", type=float, default=0.02,
                     help="relative slack on the fixed run's final loss when "
                          "defining the shared time-to-target threshold")
@@ -292,6 +439,8 @@ def main() -> None:
     print("name,value,derived")
     if args.mode == "compare":
         run_compare(args, mesh)
+    elif args.mode == "race":
+        run_race(args, mesh)
     else:
         run_resume(args, mesh)
     if args.emit_json:

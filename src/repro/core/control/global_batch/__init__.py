@@ -3,8 +3,9 @@
 `gns` holds the gradient-noise-scale estimator fed by the in-graph side
 stats from `core/grad.py`; `outer` holds `GlobalBatchConfig` and the
 fixed / geometric / gns / bandit controllers that walk the global bucket
-ladder.  The paper's inner P/PI/PID law (`core/control`) then splits each
-B_global across heterogeneous workers.
+ladder; `policy` holds the learned DYNAMIX-style `dynamix` kind
+(DESIGN.md §18).  The paper's inner P/PI/PID law (`core/control`) then
+splits each B_global across heterogeneous workers.
 """
 
 from repro.core.control.global_batch.gns import GNSEstimator, GradStats
@@ -23,6 +24,7 @@ from repro.core.control.global_batch.outer import (
 __all__ = [
     "GLOBAL_BATCH_KINDS",
     "BanditGlobalBatch",
+    "DynamixGlobalBatch",
     "FixedGlobalBatch",
     "GeometricGlobalBatch",
     "GlobalBatchConfig",
@@ -33,3 +35,12 @@ __all__ = [
     "global_batch_from_state_dict",
     "make_global_controller",
 ]
+
+
+def __getattr__(name):
+    # lazy: policy.py imports jax; the rest of the package must stay
+    # importable without it (same lazy seam as outer._controller_cls)
+    if name == "DynamixGlobalBatch":
+        from repro.core.control.global_batch.policy import DynamixGlobalBatch
+        return DynamixGlobalBatch
+    raise AttributeError(name)

@@ -27,9 +27,15 @@ Kinds (`GlobalBatchConfig.kind`):
                     hysteresis band and the slew-rate limit.
   * ``bandit``    — epsilon-greedy over ladder rungs on loss-per-second
                     reward (the DYNAMIX-shaped learned-schedule plug point).
+  * ``dynamix``   — learned contextual policy (`policy.py`, DESIGN.md §18):
+                    a jitted Q-head over a normalized system+statistical
+                    state vector picks {down, hold, up} on the same ladder.
 
 Pure host-side python, no jax imports (same rule as the inner controller
-package); all state is JSON-serializable for the §12 checkpoint payload.
+package) — EXCEPT the ``dynamix`` kind, whose implementation lives in
+`policy.py` and is resolved lazily so every other kind stays importable in
+jax-free contexts; all state is JSON-serializable for the §12 checkpoint
+payload.
 """
 
 from __future__ import annotations
@@ -43,7 +49,7 @@ import numpy as np
 from repro.core.batching import bucket_ladder, bucket_up
 from repro.core.control.global_batch.gns import GNSEstimator, GradStats
 
-GLOBAL_BATCH_KINDS = ("fixed", "geometric", "gns", "bandit")
+GLOBAL_BATCH_KINDS = ("fixed", "geometric", "gns", "bandit", "dynamix")
 
 
 @dataclasses.dataclass
@@ -71,10 +77,26 @@ class GlobalBatchConfig:
     gns_min_samples: int = 4         # estimator warmup (accepted steps)
     hysteresis: float = 0.25         # grow if b_noise > (1+h)B, shrink < (1-h)B
     allow_shrink: bool = True        # permit walking back down toward b0
-    # -- bandit --
+    # -- bandit + dynamix --
     epsilon: float = 0.15            # exploration rate
-    bandit_window: int = 6           # steps per arm episode
-    seed: int = 0                    # exploration RNG seed
+    bandit_window: int = 6           # steps per episode / decision window
+    seed: int = 0                    # exploration + weight-init RNG seed
+    # -- dynamix (policy.py, DESIGN.md §18) --
+    policy_hidden: int = 16          # Q-head width (0 = linear head)
+    policy_lr: float = 0.1           # TD step size
+    policy_momentum: float = 0.9     # SGD momentum on the Q-head
+    policy_gamma: float = 0.7        # discount across decision windows
+    policy_shaping: float = 1.0      # potential-based shaping toward b_noise
+    replay_capacity: int = 256       # transition ring-buffer size
+    replay_batch: int = 16           # transitions per jitted TD update
+    epsilon_min: float = 0.02        # exploration floor
+    epsilon_decay: float = 0.92      # per-decision epsilon decay
+    # reward/feature clock: 'measured' divides episode reward by wall or
+    # simulated seconds and feeds time-derived features; 'steps' divides by
+    # the step count and zeroes the time features, making bandit/dynamix
+    # decisions a pure function of the (backend-independent) discrete
+    # trajectory — what the cross-backend conformance battery pins on
+    time_signal: str = "measured"
 
     def __post_init__(self) -> None:
         if self.kind not in GLOBAL_BATCH_KINDS:
@@ -103,11 +125,33 @@ class GlobalBatchConfig:
             raise ValueError("epsilon must be in [0,1]")
         if self.bandit_window < 1:
             raise ValueError("bandit_window must be >= 1")
+        if self.policy_hidden < 0:
+            raise ValueError("policy_hidden must be >= 0")
+        if self.policy_lr <= 0:
+            raise ValueError("policy_lr must be > 0")
+        if not (0.0 <= self.policy_momentum < 1.0):
+            raise ValueError("policy_momentum must be in [0,1)")
+        if not (0.0 <= self.policy_gamma < 1.0):
+            raise ValueError("policy_gamma must be in [0,1)")
+        if self.policy_shaping < 0:
+            raise ValueError("policy_shaping must be >= 0")
+        if self.replay_batch < 1:
+            raise ValueError("replay_batch must be >= 1")
+        if self.replay_capacity < self.replay_batch:
+            raise ValueError("replay_capacity must be >= replay_batch")
+        if not (0.0 <= self.epsilon_min <= 1.0):
+            raise ValueError("epsilon_min must be in [0,1]")
+        if not (0.0 < self.epsilon_decay <= 1.0):
+            raise ValueError("epsilon_decay must be in (0,1]")
+        if self.time_signal not in ("measured", "steps"):
+            raise ValueError(
+                f"time_signal must be 'measured' or 'steps', "
+                f"got {self.time_signal!r}")
 
     @property
     def needs_grad_stats(self) -> bool:
         """Does this kind need the in-graph |g|^2 side stats?"""
-        return self.kind == "gns"
+        return self.kind in ("gns", "dynamix")
 
 
 class GlobalBatchController:
@@ -142,6 +186,9 @@ class GlobalBatchController:
         self.last_resize_step: Optional[int] = None
         self.num_resizes = 0
         self.resize_log: list[list[int]] = []  # [outer_step, new B_global]
+        # transient system context (worker times / prices / queue) for
+        # context-aware kinds; refreshed every observe(), never checkpointed
+        self._last_context: dict = {}
 
     # ------------------------------------------------------------------ api
 
@@ -150,15 +197,21 @@ class GlobalBatchController:
         return self.rungs[self.rung]
 
     def observe(self, *, loss: float, seconds: float,
-                stats: Optional[GradStats] = None) -> Optional[int]:
+                stats: Optional[GradStats] = None,
+                context: Optional[dict] = None) -> Optional[int]:
         """Feed one outer step; return the new B_global iff a resize fires.
 
         ``loss`` is the step's (smoothed or raw) training loss, ``seconds``
         the wall/simulated time the step cost, ``stats`` the in-graph
-        gradient moments (only the gns kind consumes them).  Warmup,
-        cooldown, and the slew-rate limit gate every kind identically.
+        gradient moments (the gns and dynamix kinds consume them), and
+        ``context`` an optional dict of system signals — ``worker_times``
+        (the round's per-worker seconds), ``prices`` (per-worker spot
+        prices) and ``queue`` (serve queue depth) — that the dynamix policy
+        folds into its state vector.  Warmup, cooldown, and the slew-rate
+        limit gate every kind identically.
         """
         self.step_count += 1
+        self._last_context = dict(context) if context else {}
         self._ingest(float(loss), float(seconds), stats)
         cfg = self.config
         if self.step_count < cfg.warmup:
@@ -342,8 +395,12 @@ class BanditGlobalBatch(GlobalBatchController):
         cfg = self.config
         if self._ep_steps < cfg.bandit_window:
             return None
-        # score the finished episode: smoothed loss drop per second
-        reward = (self._ep_loss0 - self._loss_ewma) / max(self._ep_seconds, 1e-9)
+        # score the finished episode: smoothed loss drop per time unit
+        # (seconds, or the step count under time_signal='steps' so the
+        # reward — and hence the arm walk — is backend-independent)
+        denom = (self._ep_seconds if cfg.time_signal == "measured"
+                 else float(self._ep_steps))
+        reward = (self._ep_loss0 - self._loss_ewma) / max(denom, 1e-9)
         arm = self.rung
         self.counts[arm] += 1
         self.values[arm] += (reward - self.values[arm]) / self.counts[arm]
@@ -391,15 +448,24 @@ _KIND_TO_CLS = {
 }
 
 
+def _controller_cls(kind: str):
+    """Class for ``kind`` — 'dynamix' resolves lazily because `policy.py`
+    imports jax (the one exception to this package's no-jax rule)."""
+    if kind == "dynamix":
+        from repro.core.control.global_batch.policy import DynamixGlobalBatch
+        return DynamixGlobalBatch
+    return _KIND_TO_CLS[kind]
+
+
 def make_global_controller(config: GlobalBatchConfig, b0: int,
                            quantum: int = 1) -> GlobalBatchController:
     """Factory: outer controller for ``config.kind``."""
-    return _KIND_TO_CLS[config.kind](config, b0, quantum)
+    return _controller_cls(config.kind)(config, b0, quantum)
 
 
 def global_batch_from_state_dict(state: dict) -> GlobalBatchController:
     """Rebuild the right subclass from a `state_dict()` payload."""
     kind = state["kind"]
-    if kind not in _KIND_TO_CLS:
+    if kind not in GLOBAL_BATCH_KINDS:
         raise ValueError(f"unknown global-batch kind in checkpoint: {kind!r}")
-    return _KIND_TO_CLS[kind].from_state_dict(state)
+    return _controller_cls(kind).from_state_dict(state)

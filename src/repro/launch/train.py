@@ -73,7 +73,10 @@ def main(argv=None) -> dict:
                          "GeoDamp-style doubling schedule; 'gns' = "
                          "gradient-noise-scale critical-batch tracking "
                          "(bsp only); 'bandit' = epsilon-greedy over the "
-                         "rung ladder on loss-per-second reward")
+                         "rung ladder on loss-per-second reward; 'dynamix' "
+                         "= learned contextual Q-policy over GNS + system "
+                         "state picking down/hold/up on the same ladder "
+                         "(bsp only; DESIGN.md §18)")
     ap.add_argument("--global-batch", type=float, default=8.0,
                     metavar="MAX_FACTOR",
                     help="cap for the outer loop: B may grow to at most "
@@ -151,10 +154,10 @@ def main(argv=None) -> dict:
     if args.interference:
         cluster.with_trace(-1, traces.step_interference(5.0, 1e9, 0.3))
 
-    if args.global_batch_kind == "gns" and args.sync != "bsp":
-        ap.error("--global-batch-kind gns requires --sync bsp: the GNS "
-                 "estimator needs per-round per-worker gradient moments "
-                 "(DESIGN.md §15)")
+    if args.global_batch_kind in ("gns", "dynamix") and args.sync != "bsp":
+        ap.error(f"--global-batch-kind {args.global_batch_kind} requires "
+                 "--sync bsp: the GNS estimator needs per-round per-worker "
+                 "gradient moments (DESIGN.md §15, §18)")
 
     pipe = DataPipeline(cfg, seq_len=args.seq_len, num_workers=args.workers,
                         seed=args.seed)

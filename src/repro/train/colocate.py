@@ -304,6 +304,13 @@ class ColocatedMeshTrainer(MeshTrainer):
         self._maybe_apply_policy()
         return rec
 
+    def _queue_signal(self):
+        # serve-queue pressure feeds the outer dynamix policy's state
+        # vector (DESIGN.md §18): a deep decode queue means training is
+        # about to lose devices to the SLO policy, so growing B is cheap
+        # relative to the recompile it costs
+        return float(self.batcher.stats()["queued"])
+
     def _maybe_apply_policy(self) -> None:
         """Dedicated mode, every ``check_every`` rounds: apply the SLO
         policy through the replan path (grow = training yields a device,

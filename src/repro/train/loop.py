@@ -105,9 +105,9 @@ class TrainConfig:
             raise TypeError(
                 f"global_batch must be a GlobalBatchConfig, "
                 f"got {type(self.global_batch).__name__}")
-        if self.global_batch.kind == "gns" and self.sync != "bsp":
+        if self.global_batch.kind in ("gns", "dynamix") and self.sync != "bsp":
             raise ValueError(
-                "global_batch kind='gns' estimates the noise scale from "
+                f"global_batch kind={self.global_batch.kind!r} consumes "
                 "per-worker gradient moments of one BSP round; use "
                 "sync='bsp' ('geometric'/'bandit' also run on ASP)")
 
@@ -196,9 +196,30 @@ class OuterBatchMixin:
                 lambda p, g, s, t, _u=upd: _u(p, g, s, t))
         self._opt_update = self._opt_jit_cache[key]
 
+    def _worker_prices(self) -> Optional[list]:
+        """Hook: per-worker spot prices for the outer context (or None)."""
+        return None
+
+    def _queue_signal(self) -> Optional[float]:
+        """Hook: serve-queue depth for the outer context (or None)."""
+        return None
+
+    def _outer_context(self, worker_times=None) -> dict:
+        """System context for context-aware outer kinds (DESIGN.md §18)."""
+        ctx = {}
+        if worker_times:
+            ctx["worker_times"] = [float(t) for t in worker_times]
+        prices = self._worker_prices()
+        if prices:
+            ctx["prices"] = [float(p) for p in prices]
+        q = self._queue_signal()
+        if q is not None:
+            ctx["queue"] = float(q)
+        return ctx
+
     def _observe_outer(self, *, loss: float, seconds: float,
                        sqnorms=None, pre_batches=None,
-                       combined_sqnorm=None) -> bool:
+                       combined_sqnorm=None, worker_times=None) -> bool:
         """Feed the outer controller one step; apply a resize if it fires."""
         if self.outer is None:
             return False
@@ -207,7 +228,9 @@ class OuterBatchMixin:
             stats = GradStats(per_worker_sqnorm=list(sqnorms),
                               batches=list(pre_batches),
                               combined_sqnorm=float(combined_sqnorm))
-        new_total = self.outer.observe(loss=loss, seconds=seconds, stats=stats)
+        new_total = self.outer.observe(
+            loss=loss, seconds=seconds, stats=stats,
+            context=self._outer_context(worker_times))
         if new_total is None:
             return False
         self._apply_global_batch(new_total)
@@ -277,6 +300,11 @@ class HeterogeneousTrainer(OuterBatchMixin):
         self._outer_last_time = self.sim.time
 
     # ------------------------------------------------------------- planning
+
+    def _worker_prices(self) -> Optional[list]:
+        # spot prices live on the worker specs (het/spot.py keeps them
+        # current through churn); the outer policy reads them as context
+        return [w.price for w in self.sim.workers]
 
     def _initial_batches(self) -> list[int]:
         cfg = self.cfg
@@ -404,7 +432,8 @@ class HeterogeneousTrainer(OuterBatchMixin):
                 loss=losses / max(weights, 1e-9),
                 seconds=info["iteration_time"],
                 sqnorms=sqnorms or None, pre_batches=pre_batches,
-                combined_sqnorm=g_sqnorm):
+                combined_sqnorm=g_sqnorm,
+                worker_times=info["worker_times"]):
             adjusted = True
         rec = StepRecord(
             step=self.step_idx,

@@ -697,7 +697,8 @@ class MeshTrainer(OuterBatchMixin):
                 loss=losses / max(weights, 1e-9),
                 seconds=info["iteration_time"],
                 sqnorms=sqnorms or None, pre_batches=pre_batches,
-                combined_sqnorm=g_sqnorm):
+                combined_sqnorm=g_sqnorm,
+                worker_times=raw_times):
             # a B_global resize needs NO slice replan: slices keep their
             # widths, each worker's grown batch just walks its own bucket
             # ladder — the §11 recompile bound is the ladder length

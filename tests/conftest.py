@@ -1,6 +1,8 @@
 import os
 import sys
 
+import pytest
+
 # tests must see ONE cpu device (the dry-run sets its own flag in a fresh
 # process); keep jax quiet and deterministic
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
@@ -26,3 +28,19 @@ except ImportError:
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: multi-second integration tests")
+    config.addinivalue_line(
+        "markers",
+        "tier1: fast in-process suite — the ROADMAP verify gate "
+        "(auto-applied to every test not marked subprocess)")
+    config.addinivalue_line(
+        "markers",
+        "subprocess: spawns fresh interpreters (8-fake-device runners); "
+        "runs in its own CI leg, excluded from -m tier1")
+
+
+def pytest_collection_modifyitems(config, items):
+    # the two tiers partition the suite: a test is tier1 IFF it is not a
+    # subprocess test, so `-m tier1` + `-m subprocess` covers everything
+    for item in items:
+        if item.get_closest_marker("subprocess") is None:
+            item.add_marker(pytest.mark.tier1)

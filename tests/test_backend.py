@@ -341,6 +341,7 @@ class TestMeshBackend:
             _experiment(backend=MeshBackend(dilation=[1.0])).build()
 
     @pytest.mark.slow
+    @pytest.mark.subprocess
     def test_concurrent_slices_on_debug_mesh(self):
         """Concurrent slice dispatch needs a multi-device data axis, and the
         tier-1 suite runs on ONE device — so the 8-fake-device coverage

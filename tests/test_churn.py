@@ -42,13 +42,24 @@ def _storm(seed, *, workers=8, zones=2, horizon=30):
                         degrade_rate=0.01, straggle_rate=0.02)
 
 
-def _experiment(market, churn, *, gns=False, max_steps=40, seed=0):
+def _outer_cfg(kind):
+    if kind == "fixed":
+        return GlobalBatchConfig()
+    if kind == "gns":
+        return GlobalBatchConfig(kind="gns", warmup=4, cooldown=4,
+                                 gns_min_samples=4)
+    assert kind == "dynamix"
+    return GlobalBatchConfig(kind="dynamix", warmup=4, cooldown=4,
+                             bandit_window=3, gns_min_samples=4)
+
+
+def _experiment(market, churn, *, gns=False, outer=None, max_steps=40,
+                seed=0):
     cluster = ClusterSpec.explicit(
         market.initial_fleet(), workload="linreg", seed=seed,
         backend=SimBackend()).with_churn(churn)
-    gb = (GlobalBatchConfig(kind="gns", warmup=4, cooldown=4,
-                            gns_min_samples=4) if gns
-          else GlobalBatchConfig())
+    gb = _outer_cfg(outer if outer is not None
+                    else ("gns" if gns else "fixed"))
     return Experiment(
         workload=paper_workload("linreg"),
         cluster=cluster,
@@ -184,14 +195,14 @@ def _state_snapshot(session):
 
 
 class TestCheckpointUnderFire:
-    def _run_under_fire(self, tmp_path, *, gns):
+    def _run_under_fire(self, tmp_path, *, outer):
         m = _storm(5)
         churn = compile_churn(m.simulate(), min_workers=2)
         event_steps = sorted({ev.step for ev in churn.events})
         save_step = next(s for s in event_steps if s >= 5)
         path = str(tmp_path / "under-fire")
 
-        a = _experiment(m, churn, gns=gns).session()
+        a = _experiment(m, churn, outer=outer).session()
         for _ in a:
             if a.step_idx >= save_step:
                 break
@@ -207,9 +218,7 @@ class TestCheckpointUnderFire:
         assert any(ev.step == save_step for ev in churn.events)
         fleet_now = list(a.trainer.sim.workers)
         suffix = [ev for ev in churn.events if ev.step >= save_step]
-        gb = (GlobalBatchConfig(kind="gns", warmup=4, cooldown=4,
-                                gns_min_samples=4) if gns
-              else GlobalBatchConfig())
+        gb = _outer_cfg(outer)
         exp_b = Experiment(
             workload=paper_workload("linreg"),
             cluster=ClusterSpec.explicit(
@@ -223,6 +232,19 @@ class TestCheckpointUnderFire:
         b.restore(path)
         snap_b = _state_snapshot(b)
         assert snap_a == snap_b, "restore mid-storm is not bit-identical"
+        if outer == "dynamix":
+            # the learned policy's whole brain rides the checkpoint:
+            # Q-head weights + momentum, the replay ring, and the
+            # exploration RNG must come back bit-identical
+            oa, ob = a.trainer.outer, b.trainer.outer
+            assert oa.state_dict()["extra"]["params"] == \
+                ob.state_dict()["extra"]["params"]
+            assert oa.state_dict()["extra"]["velocity"] == \
+                ob.state_dict()["extra"]["velocity"]
+            assert oa.replay == ob.replay
+            assert oa._rng.bit_generator.state == \
+                ob._rng.bit_generator.state
+            assert oa.action_log == ob.action_log
 
         for _ in a:
             pass
@@ -241,13 +263,21 @@ class TestCheckpointUnderFire:
         assert _state_snapshot(a) == _state_snapshot(b)
 
     def test_checkpoint_under_fire_fixed(self, tmp_path):
-        self._run_under_fire(tmp_path, gns=False)
+        self._run_under_fire(tmp_path, outer="fixed")
 
     def test_checkpoint_under_fire_gns_outer(self, tmp_path):
         """Same contract with the GNS outer loop live: its EWMA moments,
         rung position, cooldown clock and resize log all ride through the
         mid-storm checkpoint."""
-        self._run_under_fire(tmp_path, gns=True)
+        self._run_under_fire(tmp_path, outer="gns")
+
+    def test_checkpoint_under_fire_dynamix_outer(self, tmp_path):
+        """Same contract with the LEARNED outer policy live (DESIGN.md
+        §18): a preemption landing exactly AT the save step must resume
+        with bit-identical Q-head weights, momentum buffers, replay ring,
+        and exploration RNG — and replay the remaining storm to the same
+        history."""
+        self._run_under_fire(tmp_path, outer="dynamix")
 
     def test_restore_rejects_already_fired_events(self, tmp_path):
         """The resume guard: a schedule still containing events BEFORE the
@@ -278,6 +308,7 @@ class TestCheckpointUnderFire:
 
 
 @pytest.mark.slow
+@pytest.mark.subprocess
 def test_mesh_churn_storm_subprocess():
     """The mesh half of the churn contract, in a fresh interpreter so the
     8-fake-device XLA flag lands before jax initializes: storm replay on

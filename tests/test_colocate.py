@@ -327,6 +327,7 @@ def test_shared_mode_charges_contended_worker_on_fallback():
                     MeshBackend(), steps=2).build()
 
 
+@pytest.mark.subprocess
 def test_dedicated_grow_shrink_on_debug_mesh():
     """Multi-device co-location behaviors (dedicated slice, SLO replans,
     checkpointed reserve) need >1 device: run the subprocess suite."""
@@ -342,6 +343,7 @@ def test_dedicated_grow_shrink_on_debug_mesh():
     assert "colocate_runner: OK" in proc.stdout
 
 
+@pytest.mark.subprocess
 def test_production_serving_on_debug_mesh():
     """Production-shape serving (DESIGN.md §17) on 8 fake devices: decode
     genuinely overlaps the in-flight training round, the contended worker's

@@ -1,0 +1,91 @@
+"""Cross-backend differential battery (ISSUE 10, DESIGN.md §18).
+
+The same seeded Experiment — every outer kind (fixed/gns/bandit/dynamix)
+crossed with static-BSP and elastic remove/add schedules — runs on
+``SimBackend`` and the 8-fake-device ``MeshBackend`` in one subprocess
+(tests/conformance_runner.py), which emits the discrete outer trajectory
+of each run.  The contract under test: the outer batch controller is a
+pure function of the discrete training trajectory, so the two backends
+must agree BIT-IDENTICALLY on every decision — rung walk, resize log,
+per-step batch split, bandit arm counts, dynamix action log.
+
+Σb_k conservation is asserted per round: the split always sums to the
+controller's current B_global, B_global only changes at logged resizes,
+and every value it takes is a rung of the frozen ladder.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+RUNNER = os.path.join(os.path.dirname(__file__), "conformance_runner.py")
+
+CASES = [f"{kind}-{sched}" for kind in ("fixed", "gns", "bandit", "dynamix")
+         for sched in ("bsp", "elastic")]
+
+
+@pytest.fixture(scope="session")
+def conformance(tmp_path_factory):
+    """Run the battery once per pytest session; all tests read the JSON."""
+    proc = subprocess.run(
+        [sys.executable, RUNNER], capture_output=True, text=True,
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    blob = proc.stdout.split("CONFORMANCE_JSON_BEGIN")[1]
+    blob = blob.split("CONFORMANCE_JSON_END")[0].strip()
+    return json.loads(blob)
+
+
+@pytest.mark.subprocess
+@pytest.mark.parametrize("case", CASES)
+def test_sim_and_mesh_trajectories_bit_identical(conformance, case):
+    sim, mesh = conformance[case]["sim"], conformance[case]["mesh"]
+    # keys first, so a missing field fails loudly rather than by omission
+    assert set(sim) == set(mesh)
+    for key in sim:
+        assert sim[key] == mesh[key], (case, key, sim[key], mesh[key])
+
+
+@pytest.mark.subprocess
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("backend", ["sim", "mesh"])
+def test_global_batch_conserved_every_round(conformance, case, backend):
+    traj = conformance[case][backend]
+    for split, total in zip(traj["batches"], traj["b_global"]):
+        assert sum(split) == total, (case, split, total)
+    if "rungs" not in traj:        # kind == "fixed": B never moves
+        assert len(set(traj["b_global"])) == 1
+        return
+    rungs = traj["rungs"]
+    resize_steps = {s for s, _ in traj["resize_log"]}
+    prev = traj["b_global"][0]
+    for step, total in enumerate(traj["b_global"]):
+        assert total in rungs, (case, step, total, rungs)
+        # Σb_k may change ONLY at a step the outer logged a resize for
+        # (outer step_count s resizes the round with history index s-1)
+        if total != prev:
+            assert step + 1 in resize_steps, (case, step, traj["resize_log"])
+        prev = total
+
+
+@pytest.mark.subprocess
+def test_every_nonfixed_kind_actually_moved(conformance):
+    """Guard against vacuous conformance: the seeded config must exercise
+    real resizes on every learned/adaptive kind, on both backends."""
+    for case in CASES:
+        if case.startswith("fixed"):
+            continue
+        for backend in ("sim", "mesh"):
+            assert conformance[case][backend]["num_resizes"] > 0, case
+
+
+@pytest.mark.subprocess
+def test_dynamix_decisions_are_logged(conformance):
+    for sched in ("bsp", "elastic"):
+        traj = conformance[f"dynamix-{sched}"]["sim"]
+        assert traj["decisions"] == len(traj["action_log"]) > 0
+        assert all(a in (0, 1, 2) for a in traj["action_log"])

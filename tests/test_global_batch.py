@@ -229,7 +229,7 @@ def test_bandit_is_seed_deterministic_and_stays_on_rungs():
 
 
 def test_outer_state_roundtrip_all_kinds():
-    for kind in ("fixed", "geometric", "gns", "bandit"):
+    for kind in ("fixed", "geometric", "gns", "bandit", "dynamix"):
         ctrl = make_global_controller(
             GlobalBatchConfig(kind=kind, warmup=1, cooldown=1,
                               bandit_window=2), b0=24)

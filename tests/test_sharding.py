@@ -60,6 +60,7 @@ class TestParamSpecRules:
 
 
 @pytest.mark.slow
+@pytest.mark.subprocess
 @pytest.mark.parametrize("arch", ["llama3-8b", "grok-1-314b", "mamba2-1.3b",
                                   "recurrentgemma-9b", "deepseek-v2-236b"])
 def test_real_sharded_train_step(arch):
@@ -74,6 +75,7 @@ def test_real_sharded_train_step(arch):
 
 
 @pytest.mark.slow
+@pytest.mark.subprocess
 @pytest.mark.parametrize("arch", ["llama3-8b", "gemma-2b",
                                   "deepseek-v2-236b"])
 def test_shard_map_decode_matches_plain(arch):
